@@ -1,0 +1,53 @@
+"""Fig. 12 — heuristic scalability: wall time of Algorithm 1 vs number of
+applications / servers / variants (paper fixes 500 servers, 1000 apps,
+4 variants and sweeps each)."""
+
+from __future__ import annotations
+
+import random
+import time
+
+
+def run(quick: bool = True):
+    from repro.core.cluster import make_cluster
+    from repro.core.heuristic import faillite_heuristic
+    from repro.core.variants import Application, synthetic_family
+
+    def bench(n_apps, n_servers, n_variants):
+        rng = random.Random(0)
+        cluster = make_cluster(max(1, n_servers // 10), 10, mem=64e9)
+        apps = []
+        for i in range(n_apps):
+            lad = synthetic_family(f"f{i}", rng.uniform(1e9, 4e9),
+                                   n_variants=n_variants)
+            apps.append(Application(id=f"a{i}", family=f"f{i}",
+                                    variants=lad,
+                                    request_rate=rng.uniform(0.5, 2)))
+        t0 = time.perf_counter()
+        res = faillite_heuristic(apps, cluster)
+        dt = time.perf_counter() - t0
+        return dt, len(res.assignment)
+
+    apps_sweep = [100, 1000] if quick else [100, 500, 1000, 2000, 3000]
+    srv_sweep = [100, 500] if quick else [100, 250, 500, 750, 1000]
+    var_sweep = [2, 4] if quick else [2, 4, 6, 8]
+
+    print("# fig12: sweep,value,wall_s,placed")
+    rows = []
+    for n in apps_sweep:
+        dt, placed = bench(n, 500, 4)
+        rows.append(("apps", n, dt, placed))
+        print(f"fig12,apps,{n},{dt:.3f},{placed}")
+    for n in srv_sweep:
+        dt, placed = bench(1000, n, 4)
+        rows.append(("servers", n, dt, placed))
+        print(f"fig12,servers,{n},{dt:.3f},{placed}")
+    for n in var_sweep:
+        dt, placed = bench(1000, 500, n)
+        rows.append(("variants", n, dt, placed))
+        print(f"fig12,variants,{n},{dt:.3f},{placed}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

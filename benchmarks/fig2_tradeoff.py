@@ -1,0 +1,52 @@
+"""Fig. 2 — accuracy-resource trade-off (a) and load time (b).
+
+(a) every assigned arch's variant ladder: memory vs normalized accuracy.
+(b) load-time model calibrated by a real measurement: host byte-copy
+bandwidth (the disk->GPU analogue) + engine warmup constant.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def measure_copy_bandwidth(mb: int = 256) -> float:
+    src = np.random.bytes(mb * 2**20)
+    t0 = time.perf_counter()
+    dst = bytes(src)          # forced copy
+    dt = time.perf_counter() - t0
+    assert len(dst) == len(src)
+    return mb * 2**20 / dt
+
+
+def run(quick: bool = True):
+    from repro import configs
+    from repro.core.variants import build_ladder
+
+    bw = measure_copy_bandwidth(64 if quick else 256)
+    rows = []
+    archs = configs.ARCHS[:4] if quick else configs.ARCHS
+    for arch in archs:
+        cfg = configs.get_config(arch)
+        for v in build_ladder(cfg):
+            rows.append((arch, v.name.split(":")[1],
+                         v.mem_bytes / 2**30, v.accuracy,
+                         v.load_time(bw)))
+    print("# fig2: arch,variant,mem_gib,acc_norm,load_s "
+          f"(measured copy bw {bw/1e9:.2f} GB/s)")
+    for r in rows:
+        print(f"fig2,{r[0]},{r[1]},{r[2]:.3f},{r[3]:.4f},{r[4]:.3f}")
+    # headline check (paper: big memory cuts <-> small accuracy cuts)
+    full = [r for r in rows if r[1] == "full"]
+    small = [r for r in rows if r[1] == "w050-int8"]
+    ratio = np.mean([s[2] / f[2] for s, f in zip(small, full)])
+    dacc = np.mean([f[3] - s[3] for s, f in zip(small, full)])
+    print(f"fig2,summary,w050-int8_vs_full,mem_ratio={ratio:.3f},"
+          f"acc_drop={dacc*100:.2f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference wall time
+and numerical agreement on CPU.  On-TPU timing is not available in this
+container; the roofline deltas for the kernels are argued structurally in
+EXPERIMENTS.md §Perf (blockwise HBM traffic vs materialized scores)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                      # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick: bool = True):
+    print("# kernels: name,case,ref_us,kernel_interpret_us,max_err")
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    rows = []
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    B, S, H, KVH, hd = (1, 128, 4, 2, 64) if quick else (2, 512, 8, 2, 64)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KVH, hd))
+    v = jax.random.normal(ks[2], (B, S, KVH, hd))
+    ref = jax.jit(lambda q, k, v: attention_ref(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+        jnp.swapaxes(v, 1, 2)))
+    t_ref = _time(ref, q, k, v)
+    t_k = _time(lambda q, k, v: flash_attention(q, k, v, interpret=True),
+                q, k, v)
+    err = float(jnp.max(jnp.abs(
+        jnp.swapaxes(ref(q, k, v), 1, 2)
+        - flash_attention(q, k, v, interpret=True))))
+    rows.append(("flash_attention", f"B{B}S{S}H{H}", t_ref, t_k, err))
+
+    from repro.kernels.int8_matmul.ops import int8_matmul, quantize_int8
+    from repro.kernels.int8_matmul.ref import int8_matmul_ref
+    M, K, N = (128, 256, 128) if quick else (512, 1024, 512)
+    x = jax.random.normal(ks[3], (M, K))
+    w = jax.random.normal(ks[4], (K, N)) * 0.05
+    wq, sc = quantize_int8(w)
+    t_ref = _time(jax.jit(int8_matmul_ref), x, wq, sc)
+    t_k = _time(lambda x, wq, sc: int8_matmul(x, wq, sc, interpret=True),
+                x, wq, sc)
+    err = float(jnp.max(jnp.abs(int8_matmul_ref(x, wq, sc)
+                                - int8_matmul(x, wq, sc, interpret=True))))
+    rows.append(("int8_matmul", f"{M}x{K}x{N}", t_ref, t_k, err))
+
+    for name, case, tr, tk, err in rows:
+        print(f"kernels,{name},{case},{tr*1e6:.0f},{tk*1e6:.0f},{err:.2e}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,86 @@
+"""Roofline table — reads the dry-run records (experiments/dryrun/) and
+prints the per-(arch x shape x mesh) three-term roofline with dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, and per-device memory."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records(mesh: str = None):
+    recs = []
+    if not DRYRUN_DIR.exists():
+        return recs
+    for d in sorted(DRYRUN_DIR.iterdir()):
+        if not d.is_dir():
+            continue
+        if mesh and d.name != mesh:
+            continue
+        for f in sorted(d.glob("*.json")):
+            rec = json.loads(f.read_text())
+            if "roofline" in rec:
+                recs.append(rec)
+    return recs
+
+
+def run(quick: bool = True):
+    recs = load_records()
+    if not recs:
+        print("# roofline: no dry-run records — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return []
+    print("# roofline: mesh,arch,shape,compute_ms,memory_ms,coll_ms,"
+          "dominant,useful_frac,mem_per_dev_gib,fits_16g")
+    rows = []
+    for rec in recs:
+        r = rec["roofline"]
+        m = rec["memory"]["per_device_total"] / 2**30
+        fits = m <= 16.0
+        rows.append(r)
+        print(f"roofline,{rec['mesh']},{rec['arch']},{rec['shape']},"
+              f"{r['compute_s']*1e3:.2f},{r['memory_s']*1e3:.2f},"
+              f"{r['collective_s']*1e3:.2f},{r['dominant']},"
+              f"{r['useful_flop_frac']:.3f},{m:.2f},{int(fits)}")
+    # aggregate: dominant-term histogram
+    from collections import Counter
+    doms = Counter(r["dominant"] for r in rows)
+    print(f"roofline,summary,dominant_hist,{dict(doms)}")
+    return rows
+
+
+def markdown_tables(mesh: str = "16x16") -> str:
+    """Markdown roofline tables (EXPERIMENTS.md §Roofline source)."""
+    recs = [r for r in load_records(mesh)]
+    by_shape = {}
+    for r in recs:
+        by_shape.setdefault(r["shape"], []).append(r)
+    out = []
+    for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+        if shape not in by_shape:
+            continue
+        out.append(f"\n### {shape} ({mesh}, per step)\n")
+        out.append("| arch | compute | memory | collective | dominant "
+                   "| useful | mem/dev | mb |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        for rec in sorted(by_shape[shape], key=lambda x: x["arch"]):
+            r = rec["roofline"]
+            m = rec["memory"]["per_device_total"] / 2**30
+            unit = 1e3  # ms
+            out.append(
+                f"| {rec['arch']} | {r['compute_s']*unit:.2f} ms "
+                f"| {r['memory_s']*unit:.2f} ms "
+                f"| {r['collective_s']*unit:.2f} ms "
+                f"| {r['dominant']} | {r['useful_flop_frac']:.2f} "
+                f"| {m:.1f} GiB | {rec.get('microbatches', 1)} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+    if len(sys.argv) > 1 and sys.argv[1] == "--markdown":
+        print(markdown_tables())
+    else:
+        run(quick=False)

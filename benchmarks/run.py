@@ -1,0 +1,67 @@
+"""Benchmark harness — one module per paper figure/table + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig8,...]
+
+Emits `name,...` CSV lines per benchmark (quick mode by default; --full
+reproduces the paper-scale sweeps).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig2_tradeoff",
+    "fig5_failover",
+    "fig8_headroom",
+    "fig9_criticality",
+    "fig10_families",
+    "fig11_sites",
+    "fig12_scalability",
+    "ilp_vs_heuristic",
+    "kernels_bench",
+    "roofline",
+    "fig7_recovery",      # last: slowest (real testbed)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of modules")
+    ap.add_argument("--skip-testbed", action="store_true",
+                    help="skip the wall-clock mini-testbed benchmark")
+    args = ap.parse_args()
+
+    mods = MODULES
+    if args.only:
+        want = set(args.only.split(","))
+        mods = [m for m in MODULES if m in want]
+    if args.skip_testbed:
+        mods = [m for m in mods if m != "fig7_recovery"]
+
+    failures = 0
+    for name in mods:
+        print(f"\n=== {name} {'(full)' if args.full else '(quick)'} ===",
+              flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run(quick=not args.full)
+            print(f"=== {name} done in {time.time()-t0:.1f}s ===",
+                  flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"=== {name} FAILED ===", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

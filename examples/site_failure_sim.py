@@ -1,0 +1,36 @@
+"""Geo-correlated failures at scale: 100 servers, 10 sites, kill half.
+
+Reproduces the paper's §5.6 scenario with the site-independence
+constraint and FailLite's warm-backup reclamation (beyond-paper): the
+controller evicts stranded warm replicas of unaffected apps to make room
+for progressive failover of the ~50% of applications that lost their
+primaries.
+
+    PYTHONPATH=src python examples/site_failure_sim.py
+"""
+
+from repro.core.simulation import SimConfig, Simulation
+
+
+def main():
+    for policy in ("faillite", "full-cold"):
+        cfg = SimConfig(n_sites=10, servers_per_site=10, headroom=0.2,
+                        policy=policy, site_independence=True, seed=0)
+        sim = Simulation(cfg).setup()
+        sites = list(sim.cluster.sites)[:5]
+        print(f"\n[{policy}] {len(sim.apps)} apps on "
+              f"{len(sim.cluster.servers)} servers; "
+              f"failing sites: {sites}")
+        res = sim.inject_failure(sites=sites)
+        print(f"  affected: {res.n_affected}  "
+              f"recovered: {res.recovery_rate:.1%}  "
+              f"MTTR: {res.mttr_avg*1e3:.0f} ms  "
+              f"accuracy cost: {res.accuracy_reduction:.2%}")
+        modes = {}
+        for r in res.records.values():
+            modes[r.mode] = modes.get(r.mode, 0) + 1
+        print(f"  recovery modes: {modes}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Cluster model: servers, sites (failure domains), instances, resources.
+
+Maps the paper's edge testbed onto TPU serving cells (DESIGN.md §2): a
+"server" is a serving cell with an HBM budget and compute budget; a
+"site" is a correlated failure domain (pod / rack).  Resource vectors
+follow the paper: r ∈ {mem, compute}.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set
+
+RESOURCES = ("mem", "compute")
+
+
+@dataclass
+class Instance:
+    """A deployed model variant on a server."""
+    app_id: str
+    variant: "object"            # core.variants.Variant
+    server_id: str
+    role: str                    # "primary" | "warm" | "cold" | "loading"
+    ready: bool = True
+
+    @property
+    def demand(self) -> Dict[str, float]:
+        return self.variant.demand
+
+
+@dataclass
+class Server:
+    id: str
+    site: str
+    capacity: Dict[str, float]
+    alive: bool = True
+    instances: Dict[str, Instance] = field(default_factory=dict)
+
+    def used(self, r: str) -> float:
+        # cold instances live on disk/host, not in the accelerator budget
+        return sum(inst.demand[r] for inst in self.instances.values()
+                   if inst.role != "cold")
+
+    def free(self, r: str) -> float:
+        return self.capacity[r] - self.used(r)
+
+    def fits(self, demand: Dict[str, float]) -> bool:
+        return all(self.free(r) >= demand[r] - 1e-9 for r in RESOURCES)
+
+    def headroom(self) -> float:
+        """Normalized min free fraction across resources (worst-fit key)."""
+        return min(self.free(r) / self.capacity[r] for r in RESOURCES)
+
+
+class Cluster:
+    """Servers grouped into sites; tracks placement + liveness."""
+
+    def __init__(self, servers: List[Server]):
+        self.servers: Dict[str, Server] = {s.id: s for s in servers}
+        self.sites: Dict[str, List[str]] = {}
+        for s in servers:
+            self.sites.setdefault(s.site, []).append(s.id)
+        self._counter = itertools.count()
+
+    # -- queries ------------------------------------------------------------
+    def alive_servers(self) -> List[Server]:
+        return [s for s in self.servers.values() if s.alive]
+
+    def server_of_site(self, site: str) -> List[Server]:
+        return [self.servers[sid] for sid in self.sites.get(site, ())]
+
+    def instances_of(self, app_id: str, role: Optional[str] = None):
+        out = []
+        for s in self.servers.values():
+            for key, inst in s.instances.items():
+                if inst.app_id == app_id and (role is None
+                                              or inst.role == role):
+                    out.append((key, inst))
+        return out
+
+    def total_free(self, alive_only=True) -> Dict[str, float]:
+        servers = self.alive_servers() if alive_only else list(
+            self.servers.values())
+        return {r: sum(s.free(r) for s in servers) for r in RESOURCES}
+
+    def total_capacity(self) -> Dict[str, float]:
+        return {r: sum(s.capacity[r] for s in self.alive_servers())
+                for r in RESOURCES}
+
+    # -- placement ----------------------------------------------------------
+    def place(self, app_id: str, variant, server_id: str, role: str,
+              ready: bool = True) -> str:
+        srv = self.servers[server_id]
+        inst = Instance(app_id, variant, server_id, role, ready)
+        if role != "cold" and not srv.fits(inst.demand):
+            raise ValueError(
+                f"{server_id} cannot fit {app_id}/{variant.name}: "
+                f"free={ {r: round(srv.free(r),1) for r in RESOURCES} } "
+                f"demand={inst.demand}")
+        key = f"{app_id}@{variant.name}#{next(self._counter)}"
+        srv.instances[key] = inst
+        return key
+
+    def remove(self, key: str, server_id: str):
+        self.servers[server_id].instances.pop(key, None)
+
+    # -- failures -----------------------------------------------------------
+    def fail_server(self, server_id: str) -> List[Instance]:
+        srv = self.servers[server_id]
+        srv.alive = False
+        return list(srv.instances.values())
+
+    def fail_site(self, site: str) -> List[Instance]:
+        lost = []
+        for sid in self.sites.get(site, ()):
+            lost.extend(self.fail_server(sid))
+        return lost
+
+    def recover_server(self, server_id: str):
+        srv = self.servers[server_id]
+        srv.alive = True
+        srv.instances.clear()
+
+
+def make_cluster(n_sites: int, servers_per_site: int,
+                 mem: float = 16e9, compute: float = 1.0) -> Cluster:
+    """Uniform cluster: paper testbed = 3 sites x 2; sim = 10 x 10."""
+    servers = []
+    for si in range(n_sites):
+        for sj in range(servers_per_site):
+            servers.append(Server(
+                id=f"s{si}-{sj}", site=f"site{si}",
+                capacity={"mem": mem, "compute": compute}))
+    return Cluster(servers)

@@ -1,0 +1,370 @@
+"""FailLite controller: two-step proactive + progressive failover (§3).
+
+Workflow (paper Fig. 4):
+  (1) app arrival -> place primary, proactive warm-backup planning (ILP)
+  (2) agents load models per policy
+  (3) heartbeat failure detection -> progressive failover (Algorithm 1)
+  (4) progressive loading: smallest variant first, hot-swap to selected
+  (5) clients re-routed via routing-epoch push
+
+The same controller frame runs the paper's three baselines
+(Full-Size-Warm / -Cold / -Warm(K)) via `policy=`, and runs against
+either the discrete-event simulator or the thread-based mini-testbed via
+the LoadExecutor interface.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+from repro.core.cluster import Cluster, Instance, RESOURCES
+from repro.core.datastore import DataStore
+from repro.core.heartbeat import Clock, FailureDetector
+from repro.core.heuristic import faillite_heuristic, worst_fit, _FreeView
+from repro.core.variants import Application, Variant
+
+POLICIES = ("faillite", "full-warm", "full-cold", "full-warm-k")
+
+NOTIFY_OVERHEAD_S = 0.010      # client push notification (paper §5.7)
+
+
+class LoadExecutor:
+    """Backend that actually loads/activates model instances."""
+
+    def load(self, app: Application, variant: Variant, server_id: str,
+             on_ready: Callable[[float], None]):
+        """Asynchronously load; call on_ready(completion_time)."""
+        raise NotImplementedError
+
+    def unload(self, key: str, server_id: str):
+        pass
+
+    def activate(self, app: Application, variant: Variant, server_id: str):
+        """Warm instance starts serving (instant)."""
+        pass
+
+
+@dataclass
+class RecoveryRecord:
+    app_id: str
+    recovered: bool
+    mttr: float = math.inf
+    variant: Optional[str] = None
+    accuracy: float = 0.0
+    mode: str = "none"            # warm | cold | cold-progressive
+    upgraded_to: Optional[str] = None
+
+
+@dataclass
+class RoutingTable:
+    epoch: int = 0
+    routes: Dict[str, Tuple[str, str]] = field(default_factory=dict)
+
+    def set(self, app_id: str, server_id: str, variant_name: str):
+        self.routes[app_id] = (server_id, variant_name)
+        self.epoch += 1
+
+
+class FailLiteController:
+    def __init__(self, cluster: Cluster, clock: Clock,
+                 executor: LoadExecutor, *,
+                 policy: str = "faillite",
+                 alpha: float = 0.1,
+                 site_independence: bool = False,
+                 use_ilp: bool = False,
+                 detector: Optional[FailureDetector] = None,
+                 datastore: Optional[DataStore] = None):
+        assert policy in POLICIES, policy
+        self.cluster = cluster
+        self.clock = clock
+        self.executor = executor
+        self.policy = policy
+        self.alpha = alpha if policy == "faillite" else 0.0
+        self.site_independence = site_independence
+        self.use_ilp = use_ilp
+        self.detector = detector or FailureDetector(clock)
+        self.ds = datastore or DataStore()
+        self.apps: Dict[str, Application] = {}
+        self.primaries: Dict[str, str] = {}
+        self.warm: Dict[str, Tuple[Variant, str, str]] = {}  # app->(v,srv,key)
+        self.routing = RoutingTable()
+        self.records: Dict[str, RecoveryRecord] = {}
+
+    # ------------------------------------------------------------------
+    # Step 1: arrival + proactive failover
+    # ------------------------------------------------------------------
+    def deploy_primary(self, app: Application,
+                       server_id: Optional[str] = None) -> str:
+        """Worst-fit primary placement of the full model (paper §5.1)."""
+        self.apps[app.id] = app
+        if server_id is None:
+            view = _FreeView(self.cluster.alive_servers())
+            server_id = worst_fit(view, app.full.demand, set())
+            if server_id is None:
+                raise ValueError(f"no capacity for primary of {app.id}")
+        self.cluster.place(app.id, app.full, server_id, "primary")
+        self.primaries[app.id] = server_id
+        self.routing.set(app.id, server_id, app.full.name)
+        self.ds.put(f"primary/{app.id}", {"server": server_id,
+                                          "variant": app.full.name})
+        return server_id
+
+    def _warm_candidates(self) -> List[Application]:
+        if self.policy in ("faillite", "full-warm-k"):
+            return [a for a in self.apps.values() if a.critical]
+        if self.policy == "full-warm":
+            crit = [a for a in self.apps.values() if a.critical]
+            rest = [a for a in self.apps.values() if not a.critical]
+            return crit + rest
+        return []                  # full-cold
+
+    def plan_warm_backups(self) -> Dict[str, Tuple[Variant, str]]:
+        """Proactive step: ILP (or heuristic) for FailLite; greedy
+        full-size placement for the baselines."""
+        cands = self._warm_candidates()
+        if not cands:
+            return {}
+        if self.policy == "faillite":
+            if self.use_ilp:
+                from repro.core.placement import solve_warm_placement
+                res = solve_warm_placement(
+                    cands, self.cluster, self.primaries, alpha=self.alpha,
+                    site_independence=self.site_independence)
+                assignment = res.assignment
+            else:
+                assignment = self._heuristic_assign(cands,
+                                                    alpha=self.alpha)
+        else:
+            assignment = self._fullsize_assign(cands)
+
+        for app_id, (variant, sid) in assignment.items():
+            key = self.cluster.place(app_id, variant, sid, "warm")
+            self.warm[app_id] = (variant, sid, key)
+            self.ds.put(f"warm/{app_id}", {"server": sid,
+                                           "variant": variant.name})
+        return assignment
+
+    def _heuristic_assign(self, cands, *, alpha=0.0, servers_view=None):
+        excl = {a.id: {self.primaries.get(a.id)} for a in cands}
+        site_excl = {}
+        if self.site_independence:
+            for a in cands:
+                p = self.primaries.get(a.id)
+                site_excl[a.id] = ({self.cluster.servers[p].site}
+                                   if p else set())
+        res = faillite_heuristic(cands, self.cluster, exclude=excl,
+                                 site_exclude=site_excl, alpha=alpha)
+        return res.assignment
+
+    def _fullsize_assign(self, cands):
+        """Baselines: only the full-size variant, greedy worst-fit."""
+        view = _FreeView(self.cluster.alive_servers())
+        out = {}
+        for app in cands:
+            excl = {self.primaries.get(app.id)}
+            if self.site_independence and self.primaries.get(app.id):
+                p_site = self.cluster.servers[self.primaries[app.id]].site
+                excl |= set(self.cluster.sites.get(p_site, ()))
+            sid = worst_fit(view, app.full.demand, excl)
+            if sid is not None:
+                view.take(sid, app.full.demand)
+                out[app.id] = (app.full, sid)
+        return out
+
+    # ------------------------------------------------------------------
+    # Step 2: failure handling (progressive failover)
+    # ------------------------------------------------------------------
+    def handle_failures(self, failed_servers: List[str],
+                        t_fail: float) -> Dict[str, RecoveryRecord]:
+        """Called when the detector declares servers failed."""
+        t_detect = self.clock.now()
+        failed_set = set(failed_servers)
+        lost: List[Instance] = []
+        for sid in failed_servers:
+            lost.extend(self.cluster.fail_server(sid))
+
+        affected: List[Application] = []
+        for inst in lost:
+            if inst.role == "primary" and inst.app_id in self.apps:
+                affected.append(self.apps[inst.app_id])
+        # warm backups that died with their server are gone
+        for app_id, (v, sid, key) in list(self.warm.items()):
+            if sid in failed_set:
+                del self.warm[app_id]
+                self.ds.delete(f"warm/{app_id}")
+
+        records: Dict[str, RecoveryRecord] = {}
+
+        # (a) warm switch for apps that still have a live warm backup
+        cold_apps: List[Application] = []
+        for app in affected:
+            warm = self.warm.get(app.id)
+            if warm is not None:
+                v, sid, key = warm
+                self.executor.activate(app, v, sid)
+                self.cluster.servers[sid].instances[key].role = "primary"
+                self.primaries[app.id] = sid
+                del self.warm[app.id]
+                self.routing.set(app.id, sid, v.name)
+                mttr = (t_detect - t_fail) + NOTIFY_OVERHEAD_S
+                records[app.id] = RecoveryRecord(
+                    app.id, True, mttr, v.name, v.accuracy, "warm")
+            else:
+                cold_apps.append(app)
+
+        # (b) progressive failover for the rest
+        if cold_apps:
+            records.update(self._progressive(cold_apps, t_fail, t_detect))
+        self.records.update(records)
+        return records
+
+    def _commit(self, assignment) -> Dict[str, str]:
+        """Reserve capacity for the selected variants NOW so later
+        planning rounds see a consistent cluster state."""
+        keys = {}
+        for app_id, (v_sel, sid) in assignment.items():
+            try:
+                keys[app_id] = self.cluster.place(app_id, v_sel, sid,
+                                                  "loading", ready=False)
+            except ValueError:
+                pass            # stays un-reserved -> reported unrecovered
+        return keys
+
+    def _progressive(self, apps: List[Application], t_fail: float,
+                     t_detect: float) -> Dict[str, RecoveryRecord]:
+        if self.policy == "faillite":
+            assignment = self._heuristic_assign(apps, alpha=0.0)
+            keys = self._commit(assignment)
+            missing = [a for a in apps if a.id not in keys]
+            if missing:
+                # Beyond-paper: warm-backup reclamation. Under widespread
+                # (site-scale) failures the surviving warm replicas of
+                # *unaffected* apps strand the capacity the affected apps
+                # need; evict the lowest-value warm backups and retry.
+                extra = self._reclaim_and_assign(missing)
+                keys.update(self._commit(extra))
+                assignment.update(extra)
+        else:
+            # baselines: K-critical first, then the rest, full-size only
+            order = sorted(apps, key=lambda a: not a.critical)
+            assignment = self._fullsize_assign(order)
+            keys = self._commit(assignment)
+
+        records = {}
+        for app in apps:
+            if app.id not in keys:
+                records[app.id] = RecoveryRecord(app.id, False)
+                continue
+            v_sel, sid = assignment[app.id]
+            records[app.id] = self._progressive_load(
+                app, v_sel, sid, t_fail, t_detect, key_sel=keys[app.id])
+        return records
+
+    def _reclaim_and_assign(self, missing: List[Application]):
+        """Evict warm backups (lowest request-rate first) until the
+        missing apps place; evicted apps keep cold protection."""
+        evictable = sorted(
+            self.warm.items(),
+            key=lambda kv: self.apps[kv[0]].request_rate
+            if kv[0] in self.apps else 0.0)
+        i, batch = 0, 1
+        while i < len(evictable):
+            for app_id, (v, sid, key) in evictable[i:i + batch]:
+                self.cluster.remove(key, sid)
+                if app_id in self.warm:
+                    del self.warm[app_id]
+                self.ds.delete(f"warm/{app_id}")
+            i += batch
+            batch *= 2          # exponential batching keeps this O(log n)
+            assignment = self._heuristic_assign(missing, alpha=0.0)
+            if len(assignment) == len(missing):
+                return assignment
+        # one final, internally-consistent assignment (placements from
+        # intermediate probes are never committed, so no double-booking)
+        return self._heuristic_assign(missing, alpha=0.0)
+
+    def _progressive_load(self, app: Application, v_sel: Variant,
+                          sid: str, t_fail: float, t_detect: float,
+                          key_sel: Optional[str] = None) -> RecoveryRecord:
+        rec = RecoveryRecord(app.id, False)
+        progressive = (self.policy == "faillite"
+                       and app.smallest.name != v_sel.name
+                       and app.smallest.mem_bytes < v_sel.mem_bytes)
+        first = app.smallest if progressive else v_sel
+
+        if key_sel is None:
+            # reserve the selected variant's demand (placement decision)
+            try:
+                key_sel = self.cluster.place(app.id, v_sel, sid, "loading",
+                                             ready=False)
+            except ValueError:
+                # capacity raced away; report honestly
+                return rec
+
+        def on_first_ready(t_ready: float):
+            self.primaries[app.id] = sid
+            self.routing.set(app.id, sid, first.name)
+            rec.recovered = True
+            rec.mttr = (t_detect - t_fail) + (t_ready - t_detect) \
+                + NOTIFY_OVERHEAD_S
+            rec.variant = first.name
+            rec.accuracy = first.accuracy
+            rec.mode = "cold-progressive" if progressive else "cold"
+            if not progressive:
+                inst = self.cluster.servers[sid].instances.get(key_sel)
+                if inst is not None:
+                    inst.role = "primary"
+                    inst.ready = True
+            self.ds.put(f"primary/{app.id}", {"server": sid,
+                                              "variant": first.name})
+
+        def on_selected_ready(t_ready: float):
+            inst = self.cluster.servers[sid].instances.get(key_sel)
+            if inst is not None:
+                inst.role = "primary"
+                inst.ready = True
+            self.routing.set(app.id, sid, v_sel.name)
+            rec.variant = v_sel.name
+            rec.accuracy = v_sel.accuracy
+            rec.upgraded_to = v_sel.name
+
+        self.executor.load(app, first, sid, on_first_ready)
+        if progressive:
+            self.executor.load(app, v_sel, sid, on_selected_ready)
+        return rec
+
+    # ------------------------------------------------------------------
+    # Re-protection (beyond-paper): apps whose warm backup died get a new
+    # one planned from the remaining capacity.
+    # ------------------------------------------------------------------
+    def replan_lost_backups(self):
+        missing = [a for a in self.apps.values()
+                   if a.critical and a.id not in self.warm
+                   and self.primaries.get(a.id) in self.cluster.servers
+                   and self.cluster.servers[self.primaries[a.id]].alive]
+        if not missing:
+            return {}
+        assignment = (self._heuristic_assign(missing, alpha=self.alpha)
+                      if self.policy == "faillite"
+                      else self._fullsize_assign(missing))
+        for app_id, (variant, sid) in assignment.items():
+            key = self.cluster.place(app_id, variant, sid, "warm")
+            self.warm[app_id] = (variant, sid, key)
+        return assignment
+
+    # -- metrics -----------------------------------------------------------
+    def summarize(self, records=None) -> Dict[str, float]:
+        recs = list((records or self.records).values())
+        if not recs:
+            return {"recovery_rate": 1.0, "mttr_avg": 0.0,
+                    "accuracy_reduction": 0.0, "n": 0}
+        recovered = [r for r in recs if r.recovered]
+        rate = len(recovered) / len(recs)
+        mttr = (sum(r.mttr for r in recovered) / len(recovered)
+                if recovered else math.inf)
+        acc_red = (sum(1.0 - r.accuracy for r in recovered)
+                   / len(recovered) if recovered else 0.0)
+        return {"recovery_rate": rate, "mttr_avg": mttr,
+                "accuracy_reduction": acc_red, "n": len(recs)}

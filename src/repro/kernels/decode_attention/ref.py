@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for split-KV decode attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, lens, *, window=0):
+    """q: (B,H,hd); caches (B,KVH,Smax,hd); lens (B,). Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    _, KVH, Smax, _ = k_cache.shape
+    G = H // KVH
+    kx = jnp.repeat(k_cache, G, axis=1)
+    vx = jnp.repeat(v_cache, G, axis=1)
+    s = jnp.einsum("bhk,bhsk->bhs", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) / math.sqrt(hd)
+    pos = jnp.arange(Smax)
+    valid = pos[None, :] < lens[:, None]
+    if window > 0:
+        valid &= pos[None, :] >= lens[:, None] - window
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhs,bhsk->bhk", p, vx.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,H,Sq,hd); k,v: (B,KVH,Skv,hd). Naive materialized softmax."""
+    B, H, Sq, hd = q.shape
+    _, KVH, Skv, _ = k.shape
+    G = H // KVH
+    kx = jnp.repeat(k, G, axis=1)
+    vx = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqk,bhsk->bhqs", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) / math.sqrt(hd)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qp >= kp
+    if window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqs,bhsk->bhqk", p, vx.astype(jnp.float32))
+    return o.astype(q.dtype)

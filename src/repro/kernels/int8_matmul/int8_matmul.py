@@ -1,0 +1,86 @@
+"""Pallas TPU weight-only int8 matmul (dequant fused into the epilogue).
+
+FailLite's heterogeneous replication stores failover replicas as int8
+variants (half the HBM of bf16) — this kernel is what makes serving them
+cheap: weights stream HBM->VMEM as int8 (halving the memory-bound decode
+cost) and are dequantized with per-output-channel scales inside the MXU
+matmul epilogue, never materializing a bf16 copy of the weight matrix.
+
+x (M, K) bf16/f32 @ w_q (K, N) int8 * scale (N,) f32 -> (M, N).
+Grid (M/bm, N/bn, K/bk); fp32 accumulator in VMEM scratch across the
+sequential K dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _int8_mm_kernel(x_ref, w_ref, s_ref, o_ref, acc_scr, *, nk):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[...].astype(jnp.float32)        # (bm, bk)
+    w = w_ref[...].astype(jnp.float32)        # (bk, bn) — int8 upcast in VREG
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        scale = s_ref[...].astype(jnp.float32)        # (1, bn)
+        o_ref[...] = (acc_scr[...] * scale).astype(o_ref.dtype)
+
+
+def int8_matmul_pallas(x, w_q, scale, *, block_m=128, block_n=128,
+                       block_k=512, out_dtype=None, interpret=False):
+    """x: (M,K); w_q: (K,N) int8; scale: (N,) -> (M,N)."""
+    M, K = x.shape
+    _, N = w_q.shape
+    out_dtype = out_dtype or x.dtype
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    pm, pn, pk = (-M) % block_m, (-N) % block_n, (-K) % block_k
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        w_q = jnp.pad(w_q, ((0, pk), (0, pn)))
+    if pn:
+        scale = jnp.pad(scale, (0, pn))
+    nm, nn, nk = (M + pm) // block_m, (N + pn) // block_n, (K + pk) // block_k
+
+    kernel = functools.partial(_int8_mm_kernel, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda im, in_, ik: (im, ik)),
+            pl.BlockSpec((block_k, block_n), lambda im, in_, ik: (ik, in_)),
+            pl.BlockSpec((1, block_n), lambda im, in_, ik: (0, in_)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda im, in_, ik: (im, in_)),
+        out_shape=jax.ShapeDtypeStruct((M + pm, N + pn), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w_q, scale.reshape(1, -1))
+    return out[:M, :N]
+
+
+def quantize_int8(w, axis=0):
+    """Symmetric per-channel int8 quantization along `axis` (contraction).
+
+    Returns (w_q int8 (K,N), scale f32 (N,)) such that w ~= w_q * scale.
+    """
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = (amax / 127.0).clip(1e-8)
+    w_q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    return w_q.astype(jnp.int8), scale.reshape(-1)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the int8 weight-only matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x, w_q, scale, out_dtype=None):
+    """x: (M,K); w_q: (K,N) int8; scale: (N,)."""
+    out_dtype = out_dtype or x.dtype
+    acc = x.astype(jnp.float32) @ w_q.astype(jnp.float32)
+    return (acc * scale.astype(jnp.float32)).astype(out_dtype)

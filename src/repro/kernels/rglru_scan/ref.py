@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b, h0):
+    """a, b: (B,S,W); h0: (B,W). h_t = a_t*h_{t-1} + b_t."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    b0 = b.at[:, 0].add(a[:, 0] * h0)
+    _, h = jax.lax.associative_scan(combine, (a, b0), axis=1)
+    return h, h[:, -1]

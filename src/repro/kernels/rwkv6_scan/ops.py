@@ -1,0 +1,16 @@
+"""jit'd public wrapper for the WKV-6 chunked kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.rwkv6_scan.rwkv6_scan import wkv6_pallas
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, lw, u, *, chunk=32, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return wkv6_pallas(r, k, v, lw, u, chunk=chunk, interpret=interpret)

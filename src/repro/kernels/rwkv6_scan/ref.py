@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the WKV-6 kernel (sequential scan)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, lw, u):
+    """r,k,v,lw: (B,NH,S,hs); u: (NH,hs). Zero init state.
+
+    Returns (y (B,NH,S,hs), S_out (B,NH,hs,hs)).
+    """
+    B, NH, S, hs = r.shape
+    w = jnp.exp(lw.astype(jnp.float32))
+    state = jnp.zeros((B, NH, hs, hs), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp              # (B,NH,hs)
+        a = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bnk,bnkv->bnv", rt, s + u[..., :, None] * a)
+        s = wt[..., :, None] * s + a
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 2, 0)
+               for t in (r, k, v, w))
+    s_out, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 2).reshape(B, NH, S, hs), s_out

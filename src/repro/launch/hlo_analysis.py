@@ -1,0 +1,125 @@
+"""HLO post-processing: collective-byte accounting + roofline terms.
+
+The dry-run's compiled artifact gives FLOPs and HBM bytes via
+``cost_analysis()``; collective bytes are NOT included there, so we parse
+the (optimized) HLO text and sum the output-shape bytes of every
+communication op.  Roofline terms follow the harness formulas for
+TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every `dtype[dims]` group in a shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        nbytes = _DTYPE_BYTES.get(dtype)
+        if nbytes is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind byte totals from optimized HLO text.
+
+    Counts the *output* shape of each collective instruction (for
+    all-reduce this equals the payload; for all-gather it is the gathered
+    size — a consistent, slightly conservative convention).
+    """
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # `%name = <shape> <opcode>(...)`
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        shape_str, opcode = m.groups()
+        base = opcode
+        for k in COLLECTIVE_OPS:
+            if base == k or base.startswith(k + "-start") or base == k + "-done":
+                if base.endswith("-done"):
+                    break  # counted at -start
+                out[k] += _shape_bytes(shape_str)
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    useful_flop_frac: float
+    per_device_temp_bytes: float = 0.0
+    per_device_arg_bytes: float = 0.0
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline_terms(*, arch: str, shape: str, mesh_name: str, chips: int,
+                   hlo_flops: float, hlo_bytes: float, coll_bytes: float,
+                   model_flops: float, temp_bytes: float = 0.0,
+                   arg_bytes: float = 0.0) -> Roofline:
+    compute_s = hlo_flops / (chips * PEAK_FLOPS)
+    memory_s = hlo_bytes / (chips * HBM_BW)
+    collective_s = coll_bytes / (chips * ICI_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes, coll_bytes=coll_bytes,
+        model_flops=model_flops, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dominant,
+        useful_flop_frac=(model_flops / hlo_flops) if hlo_flops else 0.0,
+        per_device_temp_bytes=temp_bytes, per_device_arg_bytes=arg_bytes)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode: D = batch tokens."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens          # forward only
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (not module constants) so importing this module never
+touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benches see the real single CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e: one pod = 16x16 = 256 chips; two pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests use tiny ones, e.g. (2, 2))."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_local_mesh():
+    """Single-device mesh for CPU smoke paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,81 @@
+"""Step builders: train_step / prefill_step / decode_step per config.
+
+These are the functions the dry-run lowers and the drivers jit.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as MDL
+from repro.models.config import ModelConfig
+from repro.models.lm import lm_loss
+from repro.training.optimizer import AdamW
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, microbatches: int = 1):
+    """microbatches > 1 = gradient accumulation: the global batch is
+    split and processed sequentially, dividing every activation temp
+    (stash, attention carries, CE chunks) by the microbatch count at the
+    cost of re-running the collectives per microbatch."""
+    grad_fn = jax.value_and_grad(lm_loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, cfg, batch)
+        else:
+            mb = jax.tree_util.tree_map(
+                lambda t: t.reshape((microbatches,
+                                     t.shape[0] // microbatches)
+                                    + t.shape[1:]), batch)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, b):
+                gsum, lsum, auxsum = carry
+                (l, m), g = grad_fn(params, cfg, b)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l, auxsum + m["aux"]), None
+
+            (gsum, lsum, auxsum), _ = jax.lax.scan(
+                acc, (g0, jnp.zeros((), jnp.float32),
+                      jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {"ce": loss, "aux": auxsum / microbatches}
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, cache, batch):
+        if cfg.is_encoder_decoder:
+            return MDL.prefill(params, cfg, batch["tokens"], cache,
+                               batch["frame_embeds"])
+        return MDL.prefill(params, cfg, batch["tokens"], cache,
+                           batch.get("patch_embeds"))
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, batch):
+        return MDL.decode_step(params, cfg, batch["tokens"], cache)
+    return decode_step
+
+
+def make_forward(cfg: ModelConfig):
+    def fwd(params, batch):
+        if cfg.is_encoder_decoder:
+            return MDL.forward(params, cfg, batch["tokens"],
+                               batch["frame_embeds"])[0]
+        return MDL.forward(params, cfg, batch["tokens"],
+                           batch.get("patch_embeds"))[0]
+    return fwd

@@ -1,0 +1,257 @@
+"""Encoder-decoder backbone (whisper-medium).
+
+The conv audio frontend is a STUB per the harness: ``input_specs()`` feeds
+precomputed frame embeddings (B, T_frames, d_model).  Encoder layers are
+bidirectional attention + GELU MLP; decoder layers add cross-attention to
+the encoder output.  Cross K/V are computed once at prefill and cached.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.parallel.sharding import logical_constraint
+from repro.models.model import ACT_SPEC, HEAD_SPEC, RESID_SPEC, _tree_stack
+
+
+def _maybe_scan(cfg, body, carry, xs, length):
+    """lax.scan, or an unrolled loop when cfg.scan_layers is False (the
+    dry-run cost probes unroll so HLO op counts are exact)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(length):
+        x_i = jax.tree_util.tree_map(lambda t: t[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    return {
+        "norm1": L.init_layernorm(d, cfg.pdtype),
+        "attn": L.init_attention(ks[0], cfg),
+        "norm2": L.init_layernorm(d, cfg.pdtype),
+        "mlp": L.init_gelu_mlp(ks[1], d, cfg.d_ff, cfg.pdtype),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "norm1": L.init_layernorm(d, cfg.pdtype),
+        "self_attn": L.init_attention(ks[0], cfg),
+        "norm2": L.init_layernorm(d, cfg.pdtype),
+        "cross_attn": L.init_attention(ks[1], cfg),
+        "norm3": L.init_layernorm(d, cfg.pdtype),
+        "mlp": L.init_gelu_mlp(ks[2], d, cfg.d_ff, cfg.pdtype),
+    }
+
+
+def init_params(key, cfg):
+    n_enc = cfg.num_encoder_layers
+    n_dec = cfg.num_decoder_layers
+    keys = jax.random.split(key, n_enc + n_dec + 2)
+    enc = _tree_stack([_init_enc_layer(keys[i], cfg) for i in range(n_enc)])
+    dec = _tree_stack([_init_dec_layer(keys[n_enc + i], cfg)
+                       for i in range(n_dec)])
+    return {
+        "embed": L.init_embedding(keys[-1], cfg.vocab_size, cfg.d_model,
+                                  cfg.pdtype),
+        "enc_layers": enc,
+        "enc_final_norm": L.init_layernorm(cfg.d_model, cfg.pdtype),
+        "dec_layers": dec,
+        "final_norm": L.init_layernorm(cfg.d_model, cfg.pdtype),
+    }
+
+
+def _enc_layer_fwd(p, cfg, x, positions):
+    xn = logical_constraint(L.layernorm(p["norm1"], x, cfg.norm_eps),
+                            ACT_SPEC)
+    q, k, v = L._qkv(p["attn"], cfg, xn, positions)
+    o = L.flash_attention_jnp(q, k, v, causal=False,
+                              kv_block=min(1024, max(128, x.shape[1])))
+    o = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+    x = x + logical_constraint(o, RESID_SPEC)
+    xn = logical_constraint(L.layernorm(p["norm2"], x, cfg.norm_eps),
+                            ACT_SPEC)
+    x = x + logical_constraint(L.gelu_mlp(p["mlp"], xn), RESID_SPEC)
+    return x
+
+
+def encode(params, cfg, frame_embeds):
+    """frame_embeds: (B, T, d_model) from the stub frontend."""
+    x = frame_embeds.astype(cfg.adtype)
+    x = logical_constraint(x, ACT_SPEC)
+    T = x.shape[1]
+    positions = jnp.arange(T)[None, :]
+
+    def body(x, p_l):
+        return _enc_layer_fwd(p_l, cfg, x, positions), None
+
+    if cfg.remat:
+        bodyfn = jax.checkpoint(body,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+    else:
+        bodyfn = body
+    x, _ = _maybe_scan(cfg, bodyfn, x, params["enc_layers"],
+                       cfg.num_encoder_layers)
+    return L.layernorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(p, cfg, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross_attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross_attn"]["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["cross_attn"]["bk"], v + p["cross_attn"]["bv"]
+    return k, v
+
+
+def _dec_layer_fwd(p, cfg, x, positions, enc_out=None, cross_kv=None,
+                   cache=None, decode_pos=None):
+    """Decoder layer; full-seq if decode_pos is None else single-step."""
+    # --- causal self attention ---
+    xn = logical_constraint(L.layernorm(p["norm1"], x, cfg.norm_eps),
+                            ACT_SPEC)
+    q, k, v = L._qkv(p["self_attn"], cfg, xn, positions)
+    new_cache = None
+    if decode_pos is not None:
+        W_ = cache["k"].shape[1]
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], W_), 1)
+                  == decode_pos[:, None])[..., None, None]
+        knew = jnp.where(onehot, k[:, 0][:, None], cache["k"])
+        vnew = jnp.where(onehot, v[:, 0][:, None], cache["v"])
+        o = L.decode_attention_jnp(q, knew, vnew, decode_pos + 1)
+        new_cache = {"k": knew, "v": vnew}
+    elif cache is not None:
+        knew = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+        vnew = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+        o = L.flash_attention_jnp(q, k, v, causal=True,
+                                  kv_block=min(1024, max(128, x.shape[1])))
+        new_cache = {"k": knew, "v": vnew}
+    else:
+        o = L.flash_attention_jnp(q, k, v, causal=True,
+                                  kv_block=min(1024, max(128, x.shape[1])))
+    o = jnp.einsum("bshk,hkd->bsd", o, p["self_attn"]["wo"])
+    x = x + logical_constraint(o, RESID_SPEC)
+
+    # --- cross attention (no RoPE) ---
+    xn = logical_constraint(L.layernorm(p["norm2"], x, cfg.norm_eps),
+                            ACT_SPEC)
+    qx = jnp.einsum("bsd,dhk->bshk", xn, p["cross_attn"]["wq"])
+    if cfg.qkv_bias:
+        qx = qx + p["cross_attn"]["bq"]
+    if cross_kv is not None:
+        kx, vx = cross_kv
+    else:
+        kx, vx = _cross_kv(p, cfg, enc_out)
+    o = L.flash_attention_jnp(qx, kx, vx, causal=False,
+                              kv_block=min(1024, max(128, kx.shape[1])))
+    o = jnp.einsum("bshk,hkd->bsd", o, p["cross_attn"]["wo"])
+    x = x + logical_constraint(o, RESID_SPEC)
+
+    xn = logical_constraint(L.layernorm(p["norm3"], x, cfg.norm_eps),
+                            ACT_SPEC)
+    x = x + logical_constraint(L.gelu_mlp(p["mlp"], xn), RESID_SPEC)
+    return x, new_cache
+
+
+def forward(params, cfg, tokens, frame_embeds):
+    """Teacher-forced training forward. Returns (logits, aux)."""
+    x, aux = forward_features(params, cfg, tokens, frame_embeds)
+    return L.unembed(params["embed"], x), aux
+
+
+def forward_features(params, cfg, tokens, frame_embeds):
+    """Forward to the final decoder norm; no unembed matmul."""
+    enc_out = encode(params, cfg, frame_embeds)
+    x = L.embed(params["embed"], tokens).astype(cfg.adtype)
+    x = logical_constraint(x, RESID_SPEC)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, p_l):
+        y, _ = _dec_layer_fwd(p_l, cfg, x, positions, enc_out=enc_out)
+        return y, None
+
+    if cfg.remat:
+        bodyfn = jax.checkpoint(body,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+    else:
+        bodyfn = body
+    x, _ = _maybe_scan(cfg, bodyfn, x, params["dec_layers"],
+                       cfg.num_decoder_layers)
+    x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg, batch, max_len):
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    n_dec = cfg.num_decoder_layers
+    dt = cfg.adtype
+    T = cfg.encoder_seq_len
+    self_kv = {
+        "k": jnp.zeros((n_dec, batch, max_len, kv, hd), dt),
+        "v": jnp.zeros((n_dec, batch, max_len, kv, hd), dt),
+    }
+    cross_kv = {
+        "k": jnp.zeros((n_dec, batch, T, kv, hd), dt),
+        "v": jnp.zeros((n_dec, batch, T, kv, hd), dt),
+    }
+    return {"pos": jnp.zeros((batch,), jnp.int32), "self": self_kv,
+            "cross": cross_kv}
+
+
+def prefill(params, cfg, tokens, cache, frame_embeds):
+    """Encode audio, compute cross-KV, prefill decoder self-KV."""
+    enc_out = encode(params, cfg, frame_embeds)
+    x = L.embed(params["embed"], tokens).astype(cfg.adtype)
+    x = logical_constraint(x, ACT_SPEC)
+    B, S, _ = x.shape
+    positions = cache["pos"][:, None] + jnp.arange(S)[None, :]
+
+    def body(x, xs):
+        p_l, sc = xs
+        kx, vx = _cross_kv(p_l, cfg, enc_out)
+        y, new_sc = _dec_layer_fwd(p_l, cfg, x, positions,
+                                   cross_kv=(kx, vx), cache=sc)
+        return y, (new_sc, {"k": kx, "v": vx})
+
+    x, (new_self, new_cross) = _maybe_scan(
+        cfg, body, x, (params["dec_layers"],
+                       {"k": cache["self"]["k"], "v": cache["self"]["v"]}),
+        cfg.num_decoder_layers)
+    x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:])
+    new_cache = {"pos": cache["pos"] + S, "self": new_self,
+                 "cross": new_cross}
+    return logits[:, 0], new_cache
+
+
+def decode_step(params, cfg, tokens, cache):
+    pos = cache["pos"]
+    x = L.embed(params["embed"], tokens[:, None]).astype(cfg.adtype)
+
+    def body(x, xs):
+        p_l, sc, cc = xs
+        y, new_sc = _dec_layer_fwd(p_l, cfg, x, pos[:, None],
+                                   cross_kv=(cc["k"], cc["v"]),
+                                   cache=sc, decode_pos=pos)
+        return y, new_sc
+
+    x, new_self = _maybe_scan(
+        cfg, body, x, (params["dec_layers"], cache["self"], cache["cross"]),
+        cfg.num_decoder_layers)
+    x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    new_cache = {"pos": pos + 1, "self": new_self, "cross": cache["cross"]}
+    return logits[:, 0], new_cache

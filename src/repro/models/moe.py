@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bucketed dispatch.
+
+Dispatch strategy (TPU-adapted, pure JAX): sort token-slots by expert id,
+scatter into a dense (E, C, d) buffer (out-of-capacity slots dropped), run
+all experts as one batched einsum (MXU-friendly), scatter-add back with
+gate weights.  Experts are sharded over the "model" axis (EP); XLA inserts
+the token all-to-all at the sharding boundary.
+
+Used by qwen3-moe (128e top-8) and arctic (128e top-2 + dense residual).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import logical_constraint
+from repro.models.layers import _he, init_swiglu, swiglu
+
+
+def init_moe(key, cfg, dtype=None):
+    dtype = dtype or cfg.pdtype
+    E, d, ff = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _he(ks[0], (d, E), 1 / math.sqrt(d), jnp.float32),
+        "we_gate": _he(ks[1], (E, d, ff), 1 / math.sqrt(d), dtype),
+        "we_up": _he(ks[2], (E, d, ff), 1 / math.sqrt(d), dtype),
+        "we_down": _he(ks[3], (E, ff, d), 1 / math.sqrt(ff), dtype),
+    }
+    if cfg.dense_residual_d_ff:
+        p["dense"] = init_swiglu(ks[4], d, cfg.dense_residual_d_ff, dtype)
+    return p
+
+
+def _capacity(tokens: int, cfg) -> int:
+    c = int(math.ceil(tokens * cfg.top_k / cfg.num_experts
+                      * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for lane alignment
+
+
+def moe_ffn(params, cfg, x):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar fp32)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    T = B * S
+    C = _capacity(T, cfg)
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                       # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balancing aux loss.
+    me = probs.mean(0)                                        # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (T * k))
+    aux = E * jnp.sum(me * ce)
+
+    # --- dispatch: sort token-slots by expert --------------------------------
+    # Scatter/gather carry only SCALAR token ids into the (E, C) slot
+    # grid; the (E, C, d) buffer is then a row-gather. Scattering the
+    # full (T*k, d) updates made XLA materialize (T*k, d)-shaped index
+    # tensors (measured 16 GiB x dozens on the MoE train cells).
+    flat_e = idx.reshape(-1)                                  # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - starts[sorted_e]                # slot in expert
+    tok = order // k                                          # source token
+
+    slot_tok = jnp.full((E, C), T, jnp.int32)                 # T = invalid
+    slot_tok = slot_tok.at[sorted_e, pos].set(tok, mode="drop")
+    buf = jnp.take(xt, slot_tok.reshape(-1), axis=0,
+                   fill_value=0, mode="fill").reshape(E, C, d)
+    buf = logical_constraint(buf, P("model", None, None))
+
+    # --- expert computation (batched SwiGLU) --------------------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, params["we_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["we_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = logical_constraint(h, P("model", None, None))
+    eo = jnp.einsum("ecf,efd->ecd", h, params["we_down"])
+
+    # --- combine: slot grid of (expert, slot) per token-slot, row gather ----
+    slot_of = jnp.full((T * k,), E * C, jnp.int32)            # invalid
+    slot_of = slot_of.at[order].set(
+        jnp.where(pos < C, sorted_e * C + pos, E * C))
+    slot_out = jnp.take(eo.reshape(E * C, d), slot_of, axis=0,
+                        fill_value=0, mode="fill")            # (T*k, d)
+    w = gate.reshape(-1).astype(x.dtype)[:, None]
+    y = jnp.sum((slot_out * w).reshape(T, k, d), axis=1)
+    y = y.reshape(B, S, d)
+    y = logical_constraint(y, P(("pod", "data"), None, None))
+
+    if "dense" in params:
+        y = y + swiglu(params["dense"], x)
+    return y, aux
+
+
+def moe_ffn_dense_ref(params, cfg, x):
+    """O(T*E) oracle: every expert on every token, exact top-k combine.
+
+    Used by tests to validate the dispatch path (no capacity drops when
+    capacity_factor is large enough).
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gate, idx = jax.lax.top_k(probs, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    g = jnp.einsum("td,edf->etf", xt, params["we_gate"])
+    u = jnp.einsum("td,edf->etf", xt, params["we_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    eo = jnp.einsum("etf,efd->etd", h, params["we_down"])     # (E, T, d)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)        # (T, k, E)
+    w = (onehot * gate[..., None]).sum(1)                     # (T, E)
+    y = jnp.einsum("te,etd->td", w.astype(x.dtype), eo).reshape(B, S, d)
+    if "dense" in params:
+        y = y + swiglu(params["dense"], x)
+    return y

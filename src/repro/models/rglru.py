@@ -1,0 +1,141 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t),  r_t, i_t block-diag sigmoid gates
+
+Train/prefill uses `jax.lax.associative_scan` (log-depth, elementwise
+combine) — the TPU-native stand-in for the GPU Blelloch-shuffle scan; decode is a
+single fused elementwise update.  The Pallas kernel (kernels/rglru_scan)
+implements the blocked sequential-grid variant; this module is its oracle.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import logical_constraint
+from repro.models.layers import _he
+
+RGLRU_C = 8.0
+
+
+def init_rglru(key, cfg, dtype=None):
+    dtype = dtype or cfg.pdtype
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    nb = cfg.rnn_blocks
+    assert w % nb == 0, (w, nb)
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a in [0.9, 0.999] at r=1 (Griffin appendix).
+    lam_min, lam_max = 0.9, 0.999
+    u = jax.random.uniform(ks[5], (w,), jnp.float32)
+    a_init = lam_min + u * (lam_max - lam_min)
+    # a = exp(-c*softplus(L)) => softplus(L) = -log(a)/c
+    sp = -jnp.log(a_init) / RGLRU_C
+    log_lambda = jnp.log(jnp.expm1(sp))
+    return {
+        "w_x": _he(ks[0], (d, w), 1 / math.sqrt(d), dtype),
+        "w_gate_rec": _he(ks[1], (d, w), 1 / math.sqrt(d), dtype),
+        "conv_w": _he(ks[2], (cfg.conv1d_width, w), 1 / math.sqrt(cfg.conv1d_width), dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a": _he(ks[3], (nb, w // nb, w // nb), 1 / math.sqrt(w // nb), dtype),
+        "gate_x": _he(ks[4], (nb, w // nb, w // nb), 1 / math.sqrt(w // nb), dtype),
+        "log_lambda": log_lambda,
+        "w_out_rec": _he(ks[6], (w, d), 1 / math.sqrt(w), dtype),
+    }
+
+
+def _block_gate(weight, x, nb):
+    """Block-diagonal linear: x (B,S,w) -> (B,S,w)."""
+    B, S, w = x.shape
+    xb = x.reshape(B, S, nb, w // nb)
+    return jnp.einsum("bsnw,nwv->bsnv", xb, weight).reshape(B, S, w)
+
+
+def _gates(params, cfg, xb):
+    nb = cfg.rnn_blocks
+    r = jax.nn.sigmoid(_block_gate(params["gate_a"], xb, nb).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_gate(params["gate_x"], xb, nb).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(params["log_lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed in log space for stability
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * i * xb.astype(jnp.float32)
+    return a, b
+
+
+def rglru_scan(params, cfg, xb, h0=None):
+    """Associative scan over the sequence. xb: (B, S, w) post-conv input.
+
+    Returns (h (B,S,w) fp32, h_last (B,w) fp32).
+    """
+    a, b = _gates(params, cfg, xb)
+    if h0 is not None:
+        # fold the carried state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_step(params, cfg, x_t, h_prev):
+    """Single decode step. x_t: (B, w); h_prev: (B, w) fp32."""
+    a, b = _gates(params, cfg, x_t[:, None, :])
+    return a[:, 0] * h_prev + b[:, 0]
+
+
+def causal_conv1d(params, x, tail=None):
+    """Depthwise causal conv. x: (B,S,w); tail: (B,width-1,w) history or None.
+
+    Returns (y (B,S,w), new_tail (B,width-1,w)).
+    """
+    w = params["conv_w"]                   # (width, w)
+    width = w.shape[0]
+    B, S, _ = x.shape
+    if tail is None:
+        tail = jnp.zeros((B, width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + S] * w[i] for i in range(width))
+    new_tail = xp[:, S:S + width - 1] if width > 1 else tail
+    return y + params["conv_b"], new_tail
+
+
+def recurrent_block(params, cfg, x, state=None):
+    """Full Griffin recurrent block.
+
+    x: (B, S, d). state: None or {"h": (B,w) fp32, "conv": (B,width-1,w)}.
+    Returns (out (B,S,d), new_state).
+    """
+    xb = jnp.einsum("bsd,dw->bsw", x, params["w_x"])
+    gate = jnp.einsum("bsd,dw->bsw", x, params["w_gate_rec"])
+    xb = logical_constraint(xb, P(("pod", "data"), None, "model"))
+    xb, new_tail = causal_conv1d(params, xb,
+                                 None if state is None else state["conv"])
+    h0 = None if state is None else state["h"]
+    h, h_last = rglru_scan(params, cfg, xb, h0)
+    y = h.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, params["w_out_rec"])
+    return out, {"h": h_last, "conv": new_tail}
+
+
+def recurrent_block_step(params, cfg, x_t, state):
+    """Decode step. x_t: (B, d). state: {"h", "conv"}."""
+    out, new_state = recurrent_block(params, cfg, x_t[:, None, :], state)
+    return out[:, 0], new_state
+
+
+def init_rglru_state(cfg, batch, dtype):
+    w = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype),
+    }

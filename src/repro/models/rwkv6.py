@@ -1,0 +1,238 @@
+"""RWKV-6 "Finch" time-mix / channel-mix (arXiv:2404.05892).
+
+Core recurrence per head (state S in R^{hs x hs}, data-dependent decay w_t):
+
+    y_t = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Two implementations:
+  * `wkv_scan`    — step-by-step lax.scan (numerical oracle, decode path)
+  * `wkv_chunked` — chunk-parallel form: all cross-step exponents are kept
+    <= 0 (decays accumulate from chunk start), so the masked matmul variant
+    is stable in fp32. This is the MXU-friendly formulation the Pallas
+    kernel (kernels/rwkv6_scan) tiles into VMEM.
+
+The hallmark Finch feature — per-channel *data-dependent* decay via a small
+bottleneck MLP — is kept; the ddlerp token-shift is simplified to learned
+static lerp (it is a parameter-mixing detail orthogonal to the recurrence).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import logical_constraint
+from repro.models.layers import _he, init_layernorm, layernorm
+
+
+DECAY_BOTTLENECK = 64
+
+
+def init_time_mix(key, cfg, dtype=None):
+    dtype = dtype or cfg.pdtype
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    ks = jax.random.split(key, 9)
+    s = 1 / math.sqrt(d)
+    return {
+        "mix": _he(ks[0], (5, d), 0.2, jnp.float32),   # r,k,v,g,w lerp coeffs
+        "w_r": _he(ks[1], (d, d), s, dtype),
+        "w_k": _he(ks[2], (d, d), s, dtype),
+        "w_v": _he(ks[3], (d, d), s, dtype),
+        "w_g": _he(ks[4], (d, d), s, dtype),
+        "w_o": _he(ks[5], (d, d), s, dtype),
+        "decay_w1": _he(ks[6], (d, DECAY_BOTTLENECK), s, jnp.float32),
+        "decay_w2": _he(ks[7], (DECAY_BOTTLENECK, d), 1 / math.sqrt(DECAY_BOTTLENECK), jnp.float32),
+        # base decay: init so w in (0.3, 0.99) across channels
+        "decay_base": jnp.linspace(-6.0, 0.5, d, dtype=jnp.float32),
+        "bonus_u": _he(ks[8], (nh, hs), 0.5, jnp.float32),
+        "ln_x": init_layernorm(d, jnp.float32),
+    }
+
+
+def init_channel_mix(key, cfg, dtype=None):
+    dtype = dtype or cfg.pdtype
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "mix": _he(ks[0], (2, d), 0.2, jnp.float32),   # k, r lerp coeffs
+        "w_in": _he(ks[1], (d, ff), 1 / math.sqrt(d), dtype),
+        "w_out": _he(ks[2], (ff, d), 1 / math.sqrt(ff), dtype),
+        "w_r": _he(ks[3], (d, d), 1 / math.sqrt(d), dtype),
+    }
+
+
+def _token_shift(x, last=None):
+    """x_{t-1} with optional carried last token. x: (B,S,d)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    else:
+        last = last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _lerp(x, x_prev, mu):
+    mu = jax.nn.sigmoid(mu).astype(x.dtype)
+    return x + (x_prev - x) * mu
+
+
+def _rkvgw(params, cfg, x, shifted):
+    """Project mixed inputs to r,k,v,g and log-decay lw (<= 0)."""
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    B, S, _ = x.shape
+    mr, mk, mv, mg, mw = params["mix"]
+    xr = _lerp(x, shifted, mr)
+    xk = _lerp(x, shifted, mk)
+    xv = _lerp(x, shifted, mv)
+    xg = _lerp(x, shifted, mg)
+    xw = _lerp(x, shifted, mw)
+    r = jnp.einsum("bsd,de->bse", xr, params["w_r"]).reshape(B, S, nh, hs)
+    k = jnp.einsum("bsd,de->bse", xk, params["w_k"]).reshape(B, S, nh, hs)
+    v = jnp.einsum("bsd,de->bse", xv, params["w_v"]).reshape(B, S, nh, hs)
+    g = jnp.einsum("bsd,de->bse", xg, params["w_g"])
+    # data-dependent decay (Finch): lw = -exp(base + tanh(x W1) W2) <= 0
+    dd = jnp.tanh(xw.astype(jnp.float32) @ params["decay_w1"]) @ params["decay_w2"]
+    lw = -jnp.exp(params["decay_base"] + dd)            # (B,S,d), <= 0
+    lw = lw.reshape(B, S, nh, hs)
+    return r, k, v, g, lw
+
+
+def wkv_scan(r, k, v, lw, u, state=None):
+    """Sequential oracle. r,k,v,lw: (B,S,nh,hs) — returns (y, S_out).
+
+    state: (B,nh,hs,hs) fp32 or None.
+    """
+    B, S, nh, hs = r.shape
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    w = jnp.exp(lw.astype(jnp.float32))
+    if state is None:
+        state = jnp.zeros((B, nh, hs, hs), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        a = kt[..., :, None] * vt[..., None, :]           # (B,nh,hs,hs)
+        y = jnp.einsum("bnk,bnkv->bnv", rt, s + u[..., :, None] * a)
+        s = wt[..., :, None] * s + a
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, w))
+    s_out, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), s_out
+
+
+def wkv_chunked(r, k, v, lw, u, state=None, chunk=32):
+    """Chunk-parallel WKV with non-positive cross-step exponents."""
+    B, S, nh, hs = r.shape
+    pad = (-S) % chunk
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        lw = jnp.pad(lw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nchunk = Sp // chunk
+    C = chunk
+
+    def to_chunks(t):
+        return jnp.moveaxis(
+            t.reshape(B, nchunk, C, nh, hs), 1, 0).astype(jnp.float32)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, lw))
+    if state is None:
+        state = jnp.zeros((B, nh, hs, hs), jnp.float32)
+
+    causal = jnp.tril(jnp.ones((C, C), bool), k=-1)        # strict lower
+
+    def chunk_step(s, inp):
+        rt, kt, vt, lwt = inp                               # (B,C,nh,hs)
+        cum = jnp.cumsum(lwt, axis=1)                       # inclusive
+        cum_prev = cum - lwt                                # exclusive
+        cum_last = cum[:, -1:]                              # (B,1,nh,hs)
+        # inter-chunk: y_t += (r_t * exp(cum_prev)) @ S_in
+        r_dec = rt * jnp.exp(cum_prev)
+        y = jnp.einsum("bcnk,bnkv->bcnv", r_dec, s)
+        # intra-chunk (s < t): A[t,s] = sum_k r_t[k] k_s[k] e^{cum_prev_t - cum_s}
+        # exponent <= 0 whenever s <= t-1; mask kills the rest.
+        expo = cum_prev[:, :, None] - cum[:, None, :]       # (B,C,C,nh,hs)
+        a = jnp.einsum("bcnk,bsnk,bcsnk->bcsn", rt, kt,
+                       jnp.exp(jnp.minimum(expo, 0.0)))
+        a = a * causal[None, :, :, None]
+        y = y + jnp.einsum("bcsn,bsnv->bcnv", a, vt)
+        # diagonal (bonus) term
+        y = y + jnp.einsum("bcnk,bcnk,bcnv->bcnv", rt, u * kt, vt)
+        # state update: S_out = e^{cum_last} S_in + sum_s (k_s e^{cum_last-cum_s}) v_s
+        k_dec = kt * jnp.exp(cum_last - cum)
+        s = jnp.exp(cum_last[:, 0, :, :, None]) * s + \
+            jnp.einsum("bsnk,bsnv->bnkv", k_dec, vt)
+        return s, y
+
+    from repro.models import layers as _L
+    unroll = min(_L.WKV_UNROLL, nchunk) if _L.EXACT_COST_MODE else 1
+    s_out, ys = jax.lax.scan(chunk_step, state, (rc, kc, vc, lwc),
+                             unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Sp, nh, hs)[:, :S]
+    return y, s_out
+
+
+def time_mix(params, cfg, x, state=None, use_chunked=True):
+    """Full RWKV-6 time-mix layer.
+
+    x: (B,S,d). state: None or {"last": (B,d), "wkv": (B,nh,hs,hs) fp32}.
+    """
+    B, S, d = x.shape
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    shifted = _token_shift(x, None if state is None else state["last"])
+    r, k, v, g, lw = _rkvgw(params, cfg, x, shifted)
+    u = params["bonus_u"]
+    wkv_state = None if state is None else state["wkv"]
+    if use_chunked and S > 1:
+        y, s_out = wkv_chunked(r, k, v, lw, u, wkv_state)
+    else:
+        y, s_out = wkv_scan(r, k, v, lw, u, wkv_state)
+    y = y.reshape(B, S, d)
+    y = layernorm(params["ln_x"], y, eps=1e-5)
+    y = y.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, params["w_o"])
+    out = logical_constraint(out, P(("pod", "data"), None, None))
+    new_state = {"last": x[:, -1].astype(jnp.float32), "wkv": s_out}
+    return out, new_state
+
+
+def channel_mix(params, cfg, x, state=None):
+    """RWKV channel-mix (squared-ReLU FFN with receptance gate).
+
+    state: None or {"last": (B,d)}.
+    """
+    shifted = _token_shift(x, None if state is None else state["last"])
+    mk, mr = params["mix"]
+    xk = _lerp(x, shifted, mk)
+    xr = _lerp(x, shifted, mr)
+    rgate = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, params["w_r"]).astype(jnp.float32))
+    h = jnp.einsum("bsd,df->bsf", xk, params["w_in"])
+    h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    h = logical_constraint(h, P(("pod", "data"), None, "model"))
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_out"])
+    out = rgate.astype(x.dtype) * out
+    return out, {"last": x[:, -1].astype(jnp.float32)}
+
+
+def init_rwkv_state(cfg, batch):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    return {
+        "tm": {"last": jnp.zeros((batch, d), jnp.float32),
+               "wkv": jnp.zeros((batch, nh, hs, hs), jnp.float32)},
+        "cm": {"last": jnp.zeros((batch, d), jnp.float32)},
+    }

@@ -1,0 +1,40 @@
+"""Request router: epoch-versioned routing table + client notification.
+
+The controller bumps the routing epoch on every failover (the paper's
+websocket push, §4); clients observe the new (server, variant) on their
+next request — plus an explicit notify callback for push semantics.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class Router:
+    def __init__(self):
+        self._routes: Dict[str, Tuple[str, str]] = {}
+        self._epoch = 0
+        self._lock = threading.Lock()
+        self._subscribers: List[Callable[[str, str, str], None]] = []
+
+    def set_route(self, app_id: str, server_id: str, variant: str):
+        with self._lock:
+            self._routes[app_id] = (server_id, variant)
+            self._epoch += 1
+            subs = list(self._subscribers)
+        for fn in subs:
+            fn(app_id, server_id, variant)       # push notification
+
+    def lookup(self, app_id: str) -> Optional[Tuple[str, str]]:
+        with self._lock:
+            return self._routes.get(app_id)
+
+    @property
+    def epoch(self) -> int:
+        with self._lock:
+            return self._epoch
+
+    def subscribe(self, fn: Callable[[str, str, str], None]):
+        with self._lock:
+            self._subscribers.append(fn)

@@ -1,0 +1,126 @@
+"""Worker agent: one serving cell — hosts engines, heartbeats, fails.
+
+Real work happens here in the mini-testbed: `load()` actually builds JAX
+params and compiles the engine (that wall-clock time IS the measured
+cold-load cost, the analogue of the paper's Fig. 2b Triton loads), and
+`submit()` runs real batched inference on the CPU device.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.heartbeat import FailureDetector
+from repro.core.variants import Application, Variant
+from repro.models import model as MDL
+from repro.serving.engine import InferenceEngine, Request
+
+
+class WorkerServer:
+    """Thread-backed serving cell with heartbeat + engine hosting."""
+
+    def __init__(self, server_id: str, detector: FailureDetector, *,
+                 heartbeat_s: float = 0.020, batch_slots: int = 2,
+                 max_len: int = 96):
+        self.id = server_id
+        self.detector = detector
+        self.heartbeat_s = heartbeat_s
+        self.batch_slots = batch_slots
+        self.max_len = max_len
+        self.engines: Dict[str, InferenceEngine] = {}     # variant -> engine
+        self.cold_store: Dict[str, Variant] = {}          # on "disk"
+        self._alive = threading.Event()
+        self._alive.set()
+        self._threads = []
+        self._lock = threading.Lock()
+        self._work = queue.Queue()
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self):
+        hb = threading.Thread(target=self._heartbeat_loop, daemon=True)
+        wk = threading.Thread(target=self._serve_loop, daemon=True)
+        hb.start()
+        wk.start()
+        self._threads = [hb, wk]
+        return self
+
+    def kill(self):
+        """Crash-failure injection: heartbeats stop, engines vanish."""
+        self._alive.clear()
+        with self._lock:
+            self.engines.clear()
+
+    @property
+    def alive(self) -> bool:
+        return self._alive.is_set()
+
+    def _heartbeat_loop(self):
+        while self._alive.is_set():
+            self.detector.beat(self.id)
+            time.sleep(self.heartbeat_s)
+
+    def _serve_loop(self):
+        while True:
+            try:
+                fn = self._work.get(timeout=0.05)
+            except queue.Empty:
+                if not self._alive.is_set():
+                    return
+                continue
+            if not self._alive.is_set():
+                return
+            fn()
+
+    # -- model management (Triton Load/Unload analogue) -----------------------
+    def stage_cold(self, app: Application, variant: Variant):
+        """Cold replica: weights on disk/host only."""
+        self.cold_store[variant.name] = variant
+
+    def load(self, app: Application, variant: Variant,
+             warm: bool = True) -> float:
+        """Build params + compile; returns wall-clock load seconds."""
+        if not self.alive:
+            raise RuntimeError(f"{self.id} is down")
+        t0 = time.monotonic()
+        cfg = variant.config
+        assert cfg is not None, "testbed variants need real configs"
+        params = MDL.init_params(jax.random.PRNGKey(hash(variant.name)
+                                                    % (2**31)), cfg)
+        eng = InferenceEngine(cfg, params, batch_slots=self.batch_slots,
+                              max_len=self.max_len)
+        eng.warmup()
+        with self._lock:
+            if not self.alive:
+                raise RuntimeError(f"{self.id} died during load")
+            self.engines[variant.name] = eng
+        return time.monotonic() - t0
+
+    def unload(self, variant_name: str):
+        with self._lock:
+            self.engines.pop(variant_name, None)
+
+    def has(self, variant_name: str) -> bool:
+        with self._lock:
+            return variant_name in self.engines
+
+    # -- serving ---------------------------------------------------------------
+    def submit(self, variant_name: str, req: Request) -> bool:
+        with self._lock:
+            eng = self.engines.get(variant_name)
+        if eng is None or not self.alive:
+            return False
+        if not eng.try_admit(req):
+            return False
+        self._work.put(lambda: self._drain(eng))
+        return True
+
+    def _drain(self, eng: InferenceEngine):
+        while eng.active_count() and self._alive.is_set():
+            eng.step()

@@ -1,0 +1,246 @@
+"""Thread-based mini-testbed: the paper's edge testbed, on one CPU.
+
+Real components everywhere the paper's testbed had them:
+  * WorkerServer threads host real JAX engines and send real heartbeats
+  * failure injection kills the worker (heartbeats stop mid-flight)
+  * the FailureDetector declares failure after 2 missed beats
+  * the controller runs the two-step failover; cold loads really build
+    params + compile (their wall-clock duration is the measured
+    load time, Fig. 2b analogue)
+  * clients measure end-to-end downtime around the failure
+
+Model ladders use the reduced smoke configs so everything runs on CPU;
+capacities are scaled so contention matches the paper's ~50% utilization
++ configurable headroom.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro import configs
+from repro.core.cluster import Cluster, Server
+from repro.core.controller import (FailLiteController, LoadExecutor,
+                                   RecoveryRecord)
+from repro.core.heartbeat import FailureDetector, WallClock
+from repro.core.variants import Application, Variant, build_ladder
+from repro.serving.engine import Request
+from repro.serving.router import Router
+from repro.serving.server import WorkerServer
+from repro.serving.workload import make_request
+
+TESTBED_ARCHS = ["qwen2.5-3b", "qwen3-32b", "recurrentgemma-2b",
+                 "rwkv6-3b", "qwen3-moe-30b-a3b"]
+
+
+def testbed_ladder(arch: str) -> List[Variant]:
+    """Variant ladder over an extra-reduced smoke config (CPU-budget:
+    load time is dominated by XLA compiles, the testbed's stand-in for
+    the paper's disk-bandwidth-dominated Triton loads)."""
+    smoke = configs.get_smoke(arch)
+    plen = len(smoke.block_pattern)
+    n_layers = plen if not smoke.is_encoder_decoder else 2
+    kw = dict(scan_layers=True, num_layers=n_layers)
+    if smoke.is_encoder_decoder:
+        kw.update(num_encoder_layers=1, num_decoder_layers=1)
+    return build_ladder(smoke.replace(**kw), cell_mem=64e6)
+
+
+class TestbedExecutor(LoadExecutor):
+    """Executes controller load orders on real worker threads.
+
+    Loads are serialized per server (one PCIe/disk channel per cell, as
+    on the paper's testbed) and ordered: the progressive small-first load
+    completes before the selected-variant load starts.
+    """
+
+    def __init__(self, workers: Dict[str, WorkerServer], router: Router):
+        self.workers = workers
+        self.router = router
+        self._locks: Dict[str, threading.Lock] = {
+            sid: threading.Lock() for sid in workers}
+
+    def load(self, app, variant, server_id, on_ready):
+        def work():
+            try:
+                with self._locks[server_id]:
+                    self.workers[server_id].load(app, variant)
+                on_ready(time.monotonic())
+            except RuntimeError:
+                pass                      # server died mid-load
+            except Exception:             # noqa: BLE001
+                import traceback
+                traceback.print_exc()
+        threading.Thread(target=work, daemon=True).start()
+
+    def activate(self, app, variant, server_id):
+        w = self.workers[server_id]
+        if not w.has(variant.name):        # warm = pre-loaded at plan time
+            w.load(app, variant)
+
+
+@dataclass
+class ClientStats:
+    app_id: str
+    ok: int = 0
+    failed: int = 0
+    last_ok: Optional[float] = None
+    first_ok_after_gap: Optional[float] = None
+    downtime: Optional[float] = None
+
+
+class MiniTestbed:
+    def __init__(self, *, n_sites: int = 3, servers_per_site: int = 2,
+                 apps_per_arch: int = 1, critical_frac: float = 0.5,
+                 headroom: float = 0.35, policy: str = "faillite",
+                 seed: int = 0, archs: Optional[List[str]] = None):
+        self.rng = random.Random(seed)
+        self.clock = WallClock()
+        self.detector = FailureDetector(self.clock, interval=0.020)
+        self.router = Router()
+
+        # --- applications from reduced configs -------------------------
+        self.apps: List[Application] = []
+        i = 0
+        for arch in (archs or TESTBED_ARCHS):
+            for _ in range(apps_per_arch):
+                ladder = testbed_ladder(arch)
+                self.apps.append(Application(
+                    id=f"{arch}-app{i}", family=arch, variants=ladder,
+                    request_rate=self.rng.uniform(0.5, 2.0),
+                    critical=(self.rng.random() < critical_frac)))
+                i += 1
+
+        # --- capacity scaled to primaries + headroom ---------------------
+        total_primary = sum(a.full.demand["mem"] for a in self.apps)
+        max_primary = max(a.full.demand["mem"] for a in self.apps)
+        n_servers = n_sites * servers_per_site
+        mem_cap = max(total_primary / (n_servers * (1.0 - headroom) * 0.5),
+                      1.5 * max_primary)
+        servers = [Server(id=f"s{si}-{sj}", site=f"site{si}",
+                          capacity={"mem": mem_cap, "compute": 1e9})
+                   for si in range(n_sites)
+                   for sj in range(servers_per_site)]
+        self.cluster = Cluster(servers)
+
+        # --- worker threads ----------------------------------------------
+        self.workers: Dict[str, WorkerServer] = {
+            s.id: WorkerServer(s.id, self.detector).start()
+            for s in servers}
+        self.executor = TestbedExecutor(self.workers, self.router)
+        self.controller = FailLiteController(
+            self.cluster, self.clock, self.executor, policy=policy,
+            detector=self.detector)
+        # controller routing -> real router pushes
+        orig_set = self.controller.routing.set
+
+        def set_and_push(app_id, server_id, variant_name):
+            orig_set(app_id, server_id, variant_name)
+            self.router.set_route(app_id, server_id, variant_name)
+        self.controller.routing.set = set_and_push
+
+    # -- deployment ---------------------------------------------------------
+    def deploy(self):
+        for app in self.apps:
+            sid = self.controller.deploy_primary(app)
+            self.workers[sid].load(app, app.full)
+            self.router.set_route(app.id, sid, app.full.name)
+            for w in self.workers.values():      # cold replicas everywhere
+                for v in app.variants:
+                    w.stage_cold(app, v)
+        warm = self.controller.plan_warm_backups()
+        for app_id, (variant, sid) in warm.items():
+            app = next(a for a in self.apps if a.id == app_id)
+            self.workers[sid].load(app, variant)
+        return self
+
+    # -- failure experiment ---------------------------------------------------
+    def run_failure_experiment(self, victim: Optional[str] = None, *,
+                               settle_s: float = 0.3,
+                               observe_s: float = 6.0,
+                               client_hz: float = 20.0):
+        """Kill one server; measure recovery via detector + clients."""
+        victim = victim or next(
+            sid for sid, w in self.workers.items()
+            if any(i.role == "primary"
+                   for i in self.cluster.servers[sid].instances.values()))
+
+        stats = {a.id: ClientStats(a.id) for a in self.apps}
+        stop = threading.Event()
+
+        def client_loop(app: Application):
+            st = stats[app.id]
+            period = 1.0 / client_hz
+            rng = random.Random(hash(app.id) & 0xffff)
+            while not stop.is_set():
+                ok = False
+                try:
+                    route = self.router.lookup(app.id)
+                    if route:
+                        sid, vname = route
+                        w = self.workers.get(sid)
+                        if w and w.alive and w.has(vname):
+                            req = make_request(
+                                rng, f"{app.id}-r{st.ok}",
+                                app.variants[0].config.vocab_size)
+                            ok = w.submit(vname, req)
+                except Exception:                      # noqa: BLE001
+                    import traceback
+                    traceback.print_exc()
+                now = time.monotonic()
+                if ok:
+                    if (st.last_ok is not None and st.downtime is None
+                            and now - st.last_ok > 4 * period):
+                        st.downtime = now - st.last_ok
+                    st.ok += 1
+                    st.last_ok = now
+                else:
+                    st.failed += 1
+                time.sleep(period)
+
+        threads = [threading.Thread(target=client_loop, args=(a,),
+                                    daemon=True) for a in self.apps]
+        for t in threads:
+            t.start()
+        time.sleep(settle_s)
+
+        # --- inject crash ------------------------------------------------
+        t_fail = time.monotonic()
+        self.workers[victim].kill()
+
+        # --- detection loop (controller sweep every 100ms) ----------------
+        detected: List[str] = []
+        t_deadline = t_fail + observe_s
+        while time.monotonic() < t_deadline and not detected:
+            time.sleep(0.01)
+            detected = self.detector.sweep()
+        t_detect = time.monotonic()
+        records: Dict[str, RecoveryRecord] = {}
+        if detected:
+            records = self.controller.handle_failures(detected, t_fail)
+        # wait for progressive loads (engine compiles are real work)
+        deadline = time.monotonic() + observe_s
+        while time.monotonic() < deadline:
+            if all(r.recovered for r in records.values()) and records:
+                time.sleep(0.5)     # let clients observe the new route
+                break
+            time.sleep(0.05)
+        stop.set()
+        for t in threads:
+            t.join(timeout=1.0)
+
+        return {
+            "victim": victim,
+            "detect_latency_s": t_detect - t_fail,
+            "records": records,
+            "summary": self.controller.summarize(records),
+            "client_stats": stats,
+        }
+
+    def shutdown(self):
+        for w in self.workers.values():
+            w.kill()

@@ -1,0 +1,36 @@
+"""Request workload generators for the serving testbed/benchmarks."""
+
+from __future__ import annotations
+
+import itertools
+import random
+import time
+from typing import Iterator, List
+
+import numpy as np
+
+from repro.serving.engine import Request
+
+
+def make_request(rng: random.Random, rid: str, vocab: int,
+                 prompt_len=(8, 8), new_tokens=(2, 6)) -> Request:
+    """Fixed prompt length by default: the engine's prefill is jitted per
+    shape, so clients use one bucket to avoid recompiles on the hot path."""
+    S = rng.randint(*prompt_len)
+    return Request(
+        id=rid,
+        prompt=np.asarray([rng.randrange(vocab) for _ in range(S)],
+                          np.int32),
+        max_new_tokens=rng.randint(*new_tokens),
+        submitted_at=time.monotonic())
+
+
+def poisson_arrivals(rng: random.Random, rate_hz: float,
+                     duration_s: float) -> List[float]:
+    """Arrival offsets (s) of a Poisson process over [0, duration)."""
+    t, out = 0.0, []
+    while True:
+        t += rng.expovariate(rate_hz)
+        if t >= duration_s:
+            return out
+        out.append(t)

@@ -1,0 +1,108 @@
+"""Sharded numpy checkpointing with elastic restore.
+
+Fault tolerance for the training path (DESIGN.md §9): every N steps each
+leaf of (params, opt_state) is written as a .npy under a step directory
+with an atomic manifest commit; restore rebuilds the pytree and re-shards
+onto whatever mesh the restart has — including a *smaller* mesh after a
+pod loss (elastic restart), the training-side analogue of FailLite's
+progressive failover.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], f"{prefix}/{k}" if prefix else k)
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{prefix}/{i}")
+    elif hasattr(tree, "_fields"):          # NamedTuple (opt state)
+        for f in tree._fields:
+            yield from _flatten(getattr(tree, f),
+                                f"{prefix}/{f}" if prefix else f)
+    else:
+        yield prefix, tree
+
+
+def save_checkpoint(ckpt_dir: Path, step: int, params, opt_state=None,
+                    extra: Optional[Dict[str, Any]] = None) -> Path:
+    """Atomic checkpoint: write to tmp dir, fsync manifest, rename."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_"))
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    trees = {"params": params}
+    if opt_state is not None:
+        trees["opt"] = opt_state
+    for root, tree in trees.items():
+        for path, leaf in _flatten(tree, root):
+            arr = np.asarray(jax.device_get(leaf))
+            fname = path.replace("/", "__") + ".npy"
+            np.save(tmp / fname, arr)
+            manifest["leaves"].append({"path": path, "file": fname,
+                                       "dtype": str(arr.dtype),
+                                       "shape": list(arr.shape)})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+             if (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: Path, step: int, params_tmpl,
+                       opt_tmpl=None, *, shardings=None, opt_shardings=None):
+    """Restore into the templates' structure; re-shard via `shardings`
+    (works across mesh sizes — elastic restart)."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    flat = {e["path"]: e["file"] for e in manifest["leaves"]}
+
+    def rebuild(tmpl, root, shs):
+        leaves = dict(_flatten(tmpl, root))
+        sh_leaves = dict(_flatten(shs, root)) if shs is not None else {}
+
+        def walk(t, prefix):
+            if isinstance(t, dict):
+                return {k: walk(v, f"{prefix}/{k}" if prefix else k)
+                        for k, v in t.items()}
+            if isinstance(t, (list, tuple)) and not hasattr(t, "_fields"):
+                return type(t)(walk(v, f"{prefix}/{i}")
+                               for i, v in enumerate(t))
+            if hasattr(t, "_fields"):
+                return type(t)(**{f: walk(getattr(t, f), f"{prefix}/{f}")
+                                  for f in t._fields})
+            arr = np.load(d / flat[prefix])
+            arr = jnp.asarray(arr, dtype=t.dtype)
+            sh = sh_leaves.get(prefix)
+            if sh is not None:
+                arr = jax.device_put(arr, sh)
+            return arr
+        return walk(tmpl, root)
+
+    params = rebuild(params_tmpl, "params", shardings)
+    opt = (rebuild(opt_tmpl, "opt", opt_shardings)
+           if opt_tmpl is not None else None)
+    return manifest["step"], params, opt, manifest.get("extra", {})

@@ -1,0 +1,95 @@
+"""AdamW with fp32 master weights and global-norm clipping (pure JAX).
+
+Optimizer state is sharded like the params (m/v/master inherit each
+param's PartitionSpec), giving ZeRO-3-style fully sharded optimizer
+memory over the (data, model) mesh axes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    master: Any          # fp32 copy, or None-like empty dict if params fp32
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    max_grad_norm: float = 1.0
+    warmup_steps: int = 100
+    schedule: str = "cosine"          # "cosine" | "constant"
+    total_steps: int = 10_000
+
+    def _lr(self, step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(1, self.warmup_steps))
+        if self.schedule == "cosine":
+            t = jnp.clip((step - self.warmup_steps)
+                         / max(1, self.total_steps - self.warmup_steps), 0, 1)
+            decay = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        else:
+            decay = 1.0
+        return self.lr * warm * decay
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        needs_master = any(
+            p.dtype != jnp.float32 for p in jax.tree_util.tree_leaves(params))
+        master = (jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params) if needs_master else {})
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree_util.tree_map(jnp.copy, zeros),
+                          master=master)
+
+    def update(self, grads, state: AdamWState, params):
+        gleaves = jax.tree_util.tree_leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in gleaves))
+        scale = jnp.minimum(1.0, self.max_grad_norm / (gnorm + 1e-9))
+        lr = self._lr(state.step)
+        t = state.step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+        base = state.master if state.master else params
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            step = mh / (jnp.sqrt(vh) + self.eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (step + self.weight_decay * pf)
+            return m, v, pf
+
+        out = jax.tree_util.tree_map(upd, grads, state.m, state.v, base)
+        m = jax.tree_util.tree_map(lambda o: o[0], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree_util.tree_map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+        new_master = jax.tree_util.tree_map(
+            lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree_util.tree_map(
+            lambda pf, p: pf.astype(p.dtype), new_master, params)
+        new_state = AdamWState(step=state.step + 1, m=m, v=v,
+                               master=new_master if state.master else {})
+        return new_params, new_state, gnorm
+
+    def state_shapes(self, param_shapes):
+        """eval_shape twin of init (dry-run)."""
+        return jax.eval_shape(self.init, param_shapes)

@@ -1,0 +1,210 @@
+"""FailLite core: unit + hypothesis property tests for the placement
+invariants (capacity feasibility, anti-affinity, α-reserve, ILP vs
+heuristic dominance)."""
+
+import math
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import Cluster, RESOURCES, Server, make_cluster
+from repro.core.heuristic import faillite_heuristic, match
+from repro.core.placement import solve_warm_placement
+from repro.core.variants import (Application, Variant, build_ladder,
+                                 synthetic_family)
+
+
+def _apps(rng, n, mem_range=(0.5e9, 4e9), spread=6.0, critical_frac=0.5):
+    out = []
+    for i in range(n):
+        lad = synthetic_family(f"f{i}", rng.uniform(*mem_range),
+                               n_variants=4, spread=spread)
+        out.append(Application(id=f"a{i}", family=f"f{i}", variants=lad,
+                               request_rate=rng.uniform(0.5, 2.0),
+                               critical=rng.random() < critical_frac))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# variant ladders
+# ---------------------------------------------------------------------------
+
+def test_ladder_monotone_all_archs():
+    from repro import configs
+    for arch in configs.ARCHS:
+        lad = build_ladder(configs.get_config(arch))
+        mems = [v.mem_bytes for v in lad]
+        assert mems == sorted(mems, reverse=True), arch
+        assert all(0.0 < v.accuracy <= 1.0 + 1e-9 for v in lad), arch
+        assert lad[0].accuracy == max(v.accuracy for v in lad), arch
+        # Fig 2a shape: halving capacity costs only a few percent accuracy
+        small = next(v for v in lad if v.name.endswith("w050"))
+        assert lad[0].accuracy - small.accuracy < 0.05, arch
+
+
+def test_int8_variant_halves_memory():
+    from repro import configs
+    lad = build_ladder(configs.get_config("qwen2.5-3b"))
+    full = next(v for v in lad if v.name.endswith(":full"))
+    int8 = next(v for v in lad if v.name.endswith(":int8"))
+    assert abs(int8.mem_bytes / full.mem_bytes - 0.5) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n_apps=st.integers(1, 20),
+       n_servers=st.integers(2, 12),
+       alpha=st.floats(0.0, 0.5))
+def test_heuristic_feasible(seed, n_apps, n_servers, alpha):
+    """Placements never exceed per-server free capacity nor the α budget,
+    and never use excluded servers."""
+    rng = random.Random(seed)
+    cluster = make_cluster(1, n_servers, mem=16e9)
+    apps = _apps(rng, n_apps)
+    exclude = {a.id: {f"s0-{rng.randrange(n_servers)}"} for a in apps}
+    res = faillite_heuristic(apps, cluster, exclude=exclude, alpha=alpha)
+
+    used = {s.id: {r: 0.0 for r in RESOURCES}
+            for s in cluster.alive_servers()}
+    total = {r: 0.0 for r in RESOURCES}
+    for app_id, (v, sid) in res.assignment.items():
+        assert sid not in exclude[app_id]
+        for r in RESOURCES:
+            used[sid][r] += v.demand[r]
+            total[r] += v.demand[r]
+    for s in cluster.alive_servers():
+        for r in RESOURCES:
+            assert used[s.id][r] <= s.free(r) + 1e-6
+    free_total = cluster.total_free()
+    for r in RESOURCES:
+        assert total[r] <= (1 - alpha) * free_total[r] + 1e-6
+    # every app is either assigned or reported unplaced
+    assert (set(res.assignment) | set(res.unplaced)
+            == {a.id for a in apps})
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), delta=st.floats(0.01, 2.0))
+def test_match_selects_within_delta(seed, delta):
+    rng = random.Random(seed)
+    lad = synthetic_family("f", rng.uniform(1e9, 8e9), n_variants=5,
+                           spread=8.0)
+    j = match(lad, delta)
+    assert 0 <= j < len(lad)
+    if delta >= 1.0:
+        assert j == 0
+    elif j < len(lad) - 1:
+        # chosen variant obeys the δ bound (unless only smallest remains)
+        assert all(lad[j].demand[r] <= delta * lad[0].demand[r] + 1e-6
+                   for r in RESOURCES)
+
+
+def test_heuristic_prefers_larger_when_space():
+    """upgrade_model: with abundant capacity every app gets its full model."""
+    rng = random.Random(0)
+    cluster = make_cluster(1, 8, mem=64e9)
+    apps = _apps(rng, 4, mem_range=(0.5e9, 1e9))
+    res = faillite_heuristic(apps, cluster)
+    for app in apps:
+        v, _ = res.assignment[app.id]
+        assert v.name == app.variants[0].name
+
+
+# ---------------------------------------------------------------------------
+# ILP (exact B&B) vs heuristic
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_ilp_dominates_heuristic(seed):
+    rng = random.Random(seed)
+    cluster = make_cluster(2, 3, mem=8e9)
+    apps = _apps(rng, 6, mem_range=(1e9, 5e9), critical_frac=1.0)
+    primaries = {}
+    for i, a in enumerate(apps):
+        sid = cluster.alive_servers()[i % 6].id
+        cluster.place(a.id, a.variants[-1], sid, "primary")
+        primaries[a.id] = sid
+    res = solve_warm_placement(apps, cluster, primaries, alpha=0.1)
+    greedy = faillite_heuristic(
+        apps, cluster, exclude={a.id: {primaries[a.id]} for a in apps},
+        alpha=0.1)
+    obj_h = sum(v.accuracy * a.request_rate
+                for a in apps
+                for v, _ in [greedy.assignment.get(a.id, (None, None))]
+                if v is not None)
+    assert res.objective >= obj_h - 1e-6
+
+    # ILP respects anti-affinity + per-server capacity
+    used = {}
+    for app_id, (v, sid) in res.assignment.items():
+        assert sid != primaries[app_id]
+        used.setdefault(sid, 0.0)
+        used[sid] += v.demand["mem"]
+    for sid, u in used.items():
+        assert u <= cluster.servers[sid].free("mem") + 1e-3
+
+
+def test_ilp_alpha_reserve_respected():
+    rng = random.Random(3)
+    cluster = make_cluster(1, 4, mem=8e9)
+    apps = _apps(rng, 5, mem_range=(2e9, 5e9), critical_frac=1.0)
+    primaries = {a.id: "s0-0" for a in apps}
+    alpha = 0.5
+    res = solve_warm_placement(apps, cluster, primaries, alpha=alpha)
+    total = sum(v.demand["mem"] for v, _ in res.assignment.values())
+    assert total <= (1 - alpha) * cluster.total_free()["mem"] + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# cluster / datastore
+# ---------------------------------------------------------------------------
+
+def test_cluster_capacity_accounting():
+    cluster = make_cluster(1, 1, mem=10e9)
+    v = Variant("m:full", "m", 4e9, 0.1, 1.0)
+    key = cluster.place("a", v, "s0-0", "primary")
+    assert cluster.servers["s0-0"].free("mem") == pytest.approx(6e9)
+    # cold replicas don't consume accelerator memory
+    cluster.place("b", v, "s0-0", "cold")
+    assert cluster.servers["s0-0"].free("mem") == pytest.approx(6e9)
+    cluster.remove(key, "s0-0")
+    assert cluster.servers["s0-0"].free("mem") == pytest.approx(10e9)
+    with pytest.raises(ValueError):
+        cluster.place("c", Variant("m:x", "m", 11e9, 0.1, 1.0), "s0-0",
+                      "warm")
+
+
+def test_datastore_replication_and_checkpoint(tmp_path):
+    from repro.core.datastore import DataStore
+    ds = DataStore("primary")
+    replica = DataStore("replica")
+    ds.put("a", {"x": 1})
+    ds.add_replica(replica)
+    ds.put("b", [1, 2, 3])
+    ds.delete("a")
+    assert replica.get("b") == [1, 2, 3]
+    assert replica.get("a") is None
+    p = tmp_path / "snap.json"
+    ds.checkpoint_to(p)
+    ds2 = DataStore.from_checkpoint(p)
+    assert ds2.get("b") == [1, 2, 3]
+    assert ds2.version == ds.version
+
+
+def test_failure_detector_sim_clock():
+    from repro.core.heartbeat import FailureDetector, SimClock
+    clock = SimClock()
+    det = FailureDetector(clock, interval=0.02, miss_count=2)
+    det.beat("s1")
+    det.beat("s2")
+    clock.advance(0.03)
+    det.beat("s2")               # s2 keeps beating
+    assert det.sweep() == []
+    clock.advance(0.02)          # s1 now 50ms stale (> 2*20ms)
+    assert det.sweep() == ["s1"]
+    assert det.sweep() == []     # reported once

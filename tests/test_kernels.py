@@ -1,0 +1,125 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret mode vs the
+pure-jnp oracle in ref.py."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Skv,H,KVH,hd,causal,window", [
+    (2, 64, 64, 4, 2, 32, True, 0),
+    (1, 100, 100, 4, 1, 64, True, 16),       # MQA + window + ragged pad
+    (2, 96, 96, 8, 8, 32, False, 0),         # MHA bidirectional
+    (1, 33, 33, 2, 2, 128, True, 8),         # hd=128 MXU-width
+])
+def test_flash_attention(dtype, B, Sq, Skv, H, KVH, hd, causal, window):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, Sq, H, hd), dtype)
+    k = _rand(ks[1], (B, Skv, KVH, hd), dtype)
+    v = _rand(ks[2], (B, Skv, KVH, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=32, block_k=32, interpret=True)
+    ref = attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                        jnp.swapaxes(v, 1, 2), causal=causal,
+                        window=window)
+    err = jnp.max(jnp.abs(out.astype(jnp.float32)
+                          - jnp.swapaxes(ref, 1, 2).astype(jnp.float32)))
+    assert float(err) < ATOL[dtype], float(err)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KVH,hd,Smax,window", [
+    (3, 8, 2, 64, 200, 0),
+    (2, 4, 1, 32, 64, 16),
+    (1, 16, 16, 128, 300, 0),
+])
+def test_decode_attention(dtype, B, H, KVH, hd, Smax, window):
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = _rand(ks[0], (B, 1, H, hd), dtype)
+    kc = _rand(ks[1], (B, Smax, KVH, hd), dtype)
+    vc = _rand(ks[2], (B, Smax, KVH, hd), dtype)
+    lens = jax.random.randint(ks[3], (B,), 1, Smax + 1)
+    out = decode_attention(q, kc, vc, lens, window=window, block_k=64,
+                           interpret=True)
+    ref = decode_attention_ref(q[:, 0], jnp.swapaxes(kc, 1, 2),
+                               jnp.swapaxes(vc, 1, 2), lens, window=window)
+    err = jnp.max(jnp.abs(out[:, 0].astype(jnp.float32)
+                          - ref.astype(jnp.float32)))
+    assert float(err) < ATOL[dtype], float(err)
+
+
+@pytest.mark.parametrize("B,S,W,bs,bw", [
+    (2, 100, 256, 32, 128),
+    (1, 64, 128, 64, 128),
+    (3, 17, 256, 8, 256),
+])
+def test_rglru_scan(B, S, W, bs, bw):
+    from repro.kernels.rglru_scan.ops import rglru_scan
+    from repro.kernels.rglru_scan.ref import rglru_scan_ref
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W))) * 0.2 + 0.8
+    b = jax.random.normal(ks[1], (B, S, W)) * 0.1
+    h0 = jax.random.normal(ks[2], (B, W))
+    h1, hl1 = rglru_scan(a, b, h0, block_s=bs, block_w=bw, interpret=True)
+    h2, hl2 = rglru_scan_ref(a, b, h0)
+    assert float(jnp.max(jnp.abs(h1 - h2))) < 1e-5
+    assert float(jnp.max(jnp.abs(hl1 - hl2))) < 1e-5
+
+
+@pytest.mark.parametrize("B,NH,S,hs,chunk", [
+    (2, 3, 70, 16, 16),
+    (1, 2, 64, 32, 32),
+    (2, 1, 33, 8, 8),
+])
+def test_wkv6(B, NH, S, hs, chunk):
+    from repro.kernels.rwkv6_scan.ops import wkv6
+    from repro.kernels.rwkv6_scan.ref import wkv6_ref
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    r = jax.random.normal(ks[0], (B, NH, S, hs))
+    k = jax.random.normal(ks[1], (B, NH, S, hs))
+    v = jax.random.normal(ks[2], (B, NH, S, hs))
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, NH, S, hs)) * 0.5 - 2.0)
+    u = jax.random.normal(ks[4], (NH, hs)) * 0.3
+    y1, s1 = wkv6(r, k, v, lw, u, chunk=chunk, interpret=True)
+    y2, s2 = wkv6_ref(r, k, v, lw, u)
+    assert float(jnp.max(jnp.abs(y1 - y2))) < 5e-4
+    assert float(jnp.max(jnp.abs(s1 - s2))) < 5e-4
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,K,N", [(100, 300, 200), (64, 128, 64),
+                                   (33, 65, 130)])
+def test_int8_matmul(dtype, M, K, N):
+    from repro.kernels.int8_matmul.ops import int8_matmul, quantize_int8
+    from repro.kernels.int8_matmul.ref import int8_matmul_ref
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    x = _rand(ks[0], (M, K), dtype)
+    w = jax.random.normal(ks[1], (K, N)) * 0.05
+    wq, sc = quantize_int8(w)
+    out = int8_matmul(x, wq, sc, block_m=32, block_n=64, block_k=128,
+                      interpret=True)
+    ref = int8_matmul_ref(x, wq, sc)
+    err = jnp.max(jnp.abs(out.astype(jnp.float32)
+                          - ref.astype(jnp.float32)))
+    assert float(err) < ATOL[dtype] * 10, float(err)
+
+
+def test_quantize_int8_roundtrip_quality():
+    from repro.kernels.int8_matmul.int8_matmul import quantize_int8
+    w = jax.random.normal(jax.random.PRNGKey(5), (256, 128)) * 0.1
+    wq, sc = quantize_int8(w)
+    rel = float(jnp.linalg.norm(wq.astype(jnp.float32) * sc - w)
+                / jnp.linalg.norm(w))
+    assert rel < 0.01
+    assert wq.dtype == jnp.int8
