@@ -22,10 +22,14 @@ MODULES = [
     "fig11_sites",
     "fig12_scalability",
     "ilp_vs_heuristic",
+    "scenarios",
     "kernels_bench",
     "roofline",
     "fig7_recovery",      # last: slowest (real testbed)
 ]
+
+# JAX-compile / wall-clock heavy modules excluded from CI --smoke runs
+HEAVY = {"kernels_bench", "roofline", "fig7_recovery"}
 
 
 def main() -> None:
@@ -36,9 +40,17 @@ def main() -> None:
                     help="comma-separated subset of modules")
     ap.add_argument("--skip-testbed", action="store_true",
                     help="skip the wall-clock mini-testbed benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: quick mode over every figure script, "
+                         "skipping compile-heavy kernel/testbed benches; "
+                         "catches benchmark bit-rot without asserting "
+                         "numbers")
     args = ap.parse_args()
 
     mods = MODULES
+    if args.smoke:
+        args.full = False
+        mods = [m for m in mods if m not in HEAVY]
     if args.only:
         want = set(args.only.split(","))
         mods = [m for m in MODULES if m in want]

@@ -1,0 +1,41 @@
+"""Failure storm: the scenario engine end-to-end.
+
+Replays a rolling outage with rejoins, then a correlated cascade under
+workload churn, on the same 20-server cluster — showing per-epoch
+recovery, nodes rejoining empty and being re-filled, and the continuous
+re-protection loop restoring warm coverage between failure waves.
+
+    PYTHONPATH=src python examples/failure_storm.py
+"""
+
+from repro.core.scenario import SCENARIOS, build_scenario
+from repro.core.simulation import SimConfig, Simulation
+
+
+def show(res):
+    print(f"  epochs: {res.n_epochs}")
+    for ep, s in enumerate(res.per_epoch):
+        mttr = (f"{s['mttr_avg']*1e3:6.0f} ms"
+                if s["mttr_avg"] != float("inf") else "   inf")
+        print(f"    epoch {ep}: {s['n']:3d} affected  "
+              f"recovered {s['recovery_rate']:6.1%}  MTTR {mttr}  "
+              f"accuracy cost {s['accuracy_reduction']:.2%}")
+    print(f"  overall: {res.overall['recovery_rate']:.1%} of "
+          f"{res.overall['n']} recoveries, warm coverage at end "
+          f"{res.warm_coverage:.0%}, {res.n_apps_final} apps serving")
+
+
+def main():
+    cfg = SimConfig(n_sites=4, servers_per_site=5, headroom=0.2,
+                    critical_frac=0.5, policy="faillite", seed=0)
+    for name in ("rolling-with-rejoin", "cascade", "churn-under-failure"):
+        sim = Simulation(SimConfig(**cfg.__dict__)).setup()
+        scenario = build_scenario(name, sim.cluster, sim.apps,
+                                  seed=cfg.seed)
+        print(f"\n=== {name}: {scenario.description} "
+              f"({len(scenario.events)} events) ===")
+        show(sim.run_scenario(scenario))
+
+
+if __name__ == "__main__":
+    main()

@@ -105,9 +105,22 @@ class Cluster:
     def remove(self, key: str, server_id: str):
         self.servers[server_id].instances.pop(key, None)
 
+    def remove_app(self, app_id: str) -> List[str]:
+        """Drop every instance of an app (departure); returns the keys."""
+        removed = []
+        for srv in self.servers.values():
+            for key in [k for k, inst in srv.instances.items()
+                        if inst.app_id == app_id]:
+                del srv.instances[key]
+                removed.append(key)
+        return removed
+
     # -- failures -----------------------------------------------------------
     def fail_server(self, server_id: str) -> List[Instance]:
+        """Idempotent: a second fail of a dead server loses nothing new."""
         srv = self.servers[server_id]
+        if not srv.alive:
+            return []
         srv.alive = False
         return list(srv.instances.values())
 
@@ -117,10 +130,17 @@ class Cluster:
             lost.extend(self.fail_server(sid))
         return lost
 
-    def recover_server(self, server_id: str):
+    def revive_server(self, server_id: str) -> Server:
+        """A rejoining node comes back alive and EMPTY (its accelerator
+        state did not survive the crash); the control plane re-fills it."""
         srv = self.servers[server_id]
-        srv.alive = True
         srv.instances.clear()
+        srv.alive = True
+        return srv
+
+    # backwards-compatible alias
+    def recover_server(self, server_id: str):
+        self.revive_server(server_id)
 
 
 def make_cluster(n_sites: int, servers_per_site: int,

@@ -45,6 +45,10 @@ class LoadExecutor:
         """Warm instance starts serving (instant)."""
         pass
 
+    def reset_server(self, server_id: str):
+        """Server crashed or rejoined empty: drop its pending load queue."""
+        pass
+
 
 @dataclass
 class RecoveryRecord:
@@ -55,6 +59,8 @@ class RecoveryRecord:
     accuracy: float = 0.0
     mode: str = "none"            # warm | cold | cold-progressive
     upgraded_to: Optional[str] = None
+    epoch: int = 0                # failure epoch this record belongs to
+    t_fail: float = 0.0
 
 
 @dataclass
@@ -65,6 +71,10 @@ class RoutingTable:
     def set(self, app_id: str, server_id: str, variant_name: str):
         self.routes[app_id] = (server_id, variant_name)
         self.epoch += 1
+
+    def drop(self, app_id: str):
+        if self.routes.pop(app_id, None) is not None:
+            self.epoch += 1
 
 
 class FailLiteController:
@@ -90,7 +100,27 @@ class FailLiteController:
         self.primaries: Dict[str, str] = {}
         self.warm: Dict[str, Tuple[Variant, str, str]] = {}  # app->(v,srv,key)
         self.routing = RoutingTable()
+        # `records` keeps the LATEST record per app (legacy view);
+        # `epoch_records[k]` holds the records of failure epoch k, so
+        # repeated `handle_failures` calls in one run stay distinguishable.
         self.records: Dict[str, RecoveryRecord] = {}
+        self.epoch_records: List[Dict[str, RecoveryRecord]] = []
+        self.cold_protected: Set[str] = set()   # warm evicted -> cold only
+        # apps currently down: app_id -> (t_fail, epoch idx) awaiting the
+        # re-protection loop to find capacity (e.g. after a rejoin)
+        self._unrecovered: Dict[str, Tuple[float, int]] = {}
+        # per-app recovery generation; bumping it invalidates callbacks of
+        # loads scheduled before a newer failure/departure superseded them
+        self._gen: Dict[str, int] = {}
+
+    @property
+    def epoch(self) -> int:
+        """Number of failure epochs handled so far."""
+        return len(self.epoch_records)
+
+    def _bump(self, app_id: str) -> int:
+        self._gen[app_id] = self._gen.get(app_id, 0) + 1
+        return self._gen[app_id]
 
     # ------------------------------------------------------------------
     # Step 1: arrival + proactive failover
@@ -98,13 +128,15 @@ class FailLiteController:
     def deploy_primary(self, app: Application,
                        server_id: Optional[str] = None) -> str:
         """Worst-fit primary placement of the full model (paper §5.1)."""
-        self.apps[app.id] = app
         if server_id is None:
             view = _FreeView(self.cluster.alive_servers())
             server_id = worst_fit(view, app.full.demand, set())
             if server_id is None:
                 raise ValueError(f"no capacity for primary of {app.id}")
         self.cluster.place(app.id, app.full, server_id, "primary")
+        # register only after placement succeeded: a rejected arrival
+        # must not leak into controller state
+        self.apps[app.id] = app
         self.primaries[app.id] = server_id
         self.routing.set(app.id, server_id, app.full.name)
         self.ds.put(f"primary/{app.id}", {"server": server_id,
@@ -177,21 +209,58 @@ class FailLiteController:
     # Step 2: failure handling (progressive failover)
     # ------------------------------------------------------------------
     def handle_failures(self, failed_servers: List[str],
-                        t_fail: float) -> Dict[str, RecoveryRecord]:
-        """Called when the detector declares servers failed."""
-        t_detect = self.clock.now()
-        failed_set = set(failed_servers)
-        lost: List[Instance] = []
-        for sid in failed_servers:
-            lost.extend(self.cluster.fail_server(sid))
+                        t_fail: float,
+                        lost: Optional[List[Instance]] = None,
+                        ) -> Dict[str, RecoveryRecord]:
+        """Called when the detector declares servers failed.
 
-        affected: List[Application] = []
+        Re-entrant: may run any number of times per controller lifetime
+        (cascades, rolling failures, flaky nodes). Each call opens a new
+        failure *epoch*; its records land in `epoch_records[-1]`.
+        Servers already dead are ignored, in-flight recovery loads onto a
+        newly-failed server are invalidated and re-planned, and warm
+        bookkeeping is reconciled against the surviving cluster state.
+
+        `lost` lets the caller pass the instances that died when the
+        crash actually happened (the simulator applies the physical
+        failure at t_fail and detection fires ~65ms later — the server
+        may even have rejoined inside that window); when omitted, the
+        physical failure is applied now.
+        """
+        t_detect = self.clock.now()
+        epoch = len(self.epoch_records)
+        if lost is None:
+            failed_set = {sid for sid in failed_servers
+                          if self.cluster.servers[sid].alive}
+            lost = []
+            for sid in failed_set:
+                lost.extend(self.cluster.fail_server(sid))
+                self.detector.mark_failed(sid)
+                self.executor.reset_server(sid)
+        else:
+            # crash already applied; only servers still down count for
+            # the warm-backup reconciliation below
+            failed_set = {sid for sid in failed_servers
+                          if not self.cluster.servers[sid].alive}
+
+        # Apps hit by this epoch: lost their serving primary OR an
+        # in-flight recovery load (role "loading" from a prior epoch).
+        affected_ids: List[str] = []
         for inst in lost:
-            if inst.role == "primary" and inst.app_id in self.apps:
-                affected.append(self.apps[inst.app_id])
-        # warm backups that died with their server are gone
+            if (inst.role in ("primary", "loading")
+                    and inst.app_id in self.apps
+                    and inst.app_id not in affected_ids):
+                affected_ids.append(inst.app_id)
+        affected = [self.apps[a] for a in affected_ids]
+        for app in affected:
+            self._bump(app.id)           # invalidate stale load callbacks
+            self.primaries.pop(app.id, None)
+            self._unrecovered.pop(app.id, None)   # superseded by new epoch
+        # warm backups that died with their server are gone; also drop any
+        # entry whose instance vanished from the cluster out-of-band
         for app_id, (v, sid, key) in list(self.warm.items()):
-            if sid in failed_set:
+            if (sid in failed_set
+                    or key not in self.cluster.servers[sid].instances):
                 del self.warm[app_id]
                 self.ds.delete(f"warm/{app_id}")
 
@@ -217,6 +286,10 @@ class FailLiteController:
         # (b) progressive failover for the rest
         if cold_apps:
             records.update(self._progressive(cold_apps, t_fail, t_detect))
+        for app_id, rec in records.items():
+            rec.epoch = epoch
+            rec.t_fail = t_fail
+        self.epoch_records.append(records)
         self.records.update(records)
         return records
 
@@ -256,6 +329,10 @@ class FailLiteController:
         for app in apps:
             if app.id not in keys:
                 records[app.id] = RecoveryRecord(app.id, False)
+                # nothing committed: app stays down until the continuous
+                # re-protection loop finds capacity (e.g. after a rejoin)
+                self._unrecovered[app.id] = (t_fail,
+                                             len(self.epoch_records))
                 continue
             v_sel, sid = assignment[app.id]
             records[app.id] = self._progressive_load(
@@ -276,6 +353,11 @@ class FailLiteController:
                 if app_id in self.warm:
                     del self.warm[app_id]
                 self.ds.delete(f"warm/{app_id}")
+                # demoted, not abandoned: the model artifact stays on
+                # disk, so the app keeps cold (progressive) protection
+                self.cold_protected.add(app_id)
+                self.ds.put(f"cold/{app_id}", {"variant": v.name,
+                                               "reason": "reclaimed"})
             i += batch
             batch *= 2          # exponential batching keeps this O(log n)
             assignment = self._heuristic_assign(missing, alpha=0.0)
@@ -301,9 +383,22 @@ class FailLiteController:
                                              ready=False)
             except ValueError:
                 # capacity raced away; report honestly
+                self._unrecovered[app.id] = (t_fail,
+                                             len(self.epoch_records))
                 return rec
 
+        # Loads scheduled now are void if a later epoch kills the target
+        # server (gen bumped) or the app departs; callbacks check both.
+        gen = self._gen.get(app.id, 0)
+
+        def _stale() -> bool:
+            return (self._gen.get(app.id, 0) != gen
+                    or app.id not in self.apps
+                    or not self.cluster.servers[sid].alive)
+
         def on_first_ready(t_ready: float):
+            if _stale():
+                return
             self.primaries[app.id] = sid
             self.routing.set(app.id, sid, first.name)
             rec.recovered = True
@@ -321,6 +416,8 @@ class FailLiteController:
                                               "variant": first.name})
 
         def on_selected_ready(t_ready: float):
+            if _stale():
+                return
             inst = self.cluster.servers[sid].instances.get(key_sel)
             if inst is not None:
                 inst.role = "primary"
@@ -336,12 +433,92 @@ class FailLiteController:
         return rec
 
     # ------------------------------------------------------------------
-    # Re-protection (beyond-paper): apps whose warm backup died get a new
-    # one planned from the remaining capacity.
+    # Membership events (scenario engine)
     # ------------------------------------------------------------------
+    def handle_rejoin(self, server_id: str):
+        """A failed server rejoins EMPTY: reconcile detector/executor
+        state and scrub stale references; the re-protection loop refills
+        the returned capacity with warm backups / retried recoveries."""
+        srv = self.cluster.servers[server_id]
+        if srv.alive:
+            return
+        self.cluster.revive_server(server_id)
+        self.detector.revive(server_id)
+        self.executor.reset_server(server_id)
+        # defensive scrub: nothing should still point at a node that was
+        # down, but repeated epochs make invariants worth re-asserting
+        for app_id in [a for a, s in self.primaries.items()
+                       if s == server_id]:
+            self._bump(app_id)
+            del self.primaries[app_id]
+        for app_id in [a for a, (_, s, _) in self.warm.items()
+                       if s == server_id]:
+            del self.warm[app_id]
+            self.ds.delete(f"warm/{app_id}")
+
+    def handle_departure(self, app_id: str):
+        """App leaves: release every replica and forget its bookkeeping."""
+        self._bump(app_id)
+        self.apps.pop(app_id, None)
+        self.cluster.remove_app(app_id)
+        self.primaries.pop(app_id, None)
+        if app_id in self.warm:
+            del self.warm[app_id]
+        self._unrecovered.pop(app_id, None)
+        self.cold_protected.discard(app_id)
+        self.routing.drop(app_id)
+        self.ds.delete(f"primary/{app_id}")
+        self.ds.delete(f"warm/{app_id}")
+        self.ds.delete(f"cold/{app_id}")
+
+    # ------------------------------------------------------------------
+    # Continuous re-protection (beyond-paper): a periodic loop, driven by
+    # the simulator's event queue, that (1) retries progressive recovery
+    # for apps still down from earlier epochs and (2) re-plans warm
+    # backups lost to failures/evictions — so protection converges back
+    # after every churn/failure/rejoin event.
+    # ------------------------------------------------------------------
+    def reprotect(self) -> Dict[str, int]:
+        retried = self._retry_unrecovered()
+        replanned = self.replan_lost_backups()
+        return {"retried": retried, "replanned": len(replanned)}
+
+    def _retry_unrecovered(self) -> int:
+        down = [(aid, tf, ep) for aid, (tf, ep) in self._unrecovered.items()
+                if aid in self.apps]
+        if not down:
+            return 0
+        apps = [self.apps[aid] for aid, _, _ in down]
+        if self.policy == "faillite":
+            assignment = self._heuristic_assign(apps, alpha=0.0)
+        else:
+            assignment = self._fullsize_assign(apps)
+        keys = self._commit(assignment)
+        now = self.clock.now()
+        n = 0
+        for aid, t_fail, ep in down:
+            if aid not in keys:
+                continue
+            del self._unrecovered[aid]
+            self._bump(aid)
+            v_sel, sid = assignment[aid]
+            # MTTR keeps the ORIGINAL failure time: the outage lasted
+            # from the first loss until this late recovery completes.
+            rec = self._progressive_load(self.apps[aid], v_sel, sid,
+                                         t_fail, now, key_sel=keys[aid])
+            rec.epoch = ep
+            rec.t_fail = t_fail
+            if ep < len(self.epoch_records):
+                self.epoch_records[ep][aid] = rec
+            self.records[aid] = rec
+            n += 1
+        return n
+
     def replan_lost_backups(self):
-        missing = [a for a in self.apps.values()
-                   if a.critical and a.id not in self.warm
+        """Apps whose warm backup died get a new one planned from the
+        remaining capacity. Idempotent; safe to call every sweep."""
+        missing = [a for a in self._warm_candidates()
+                   if a.id not in self.warm
                    and self.primaries.get(a.id) in self.cluster.servers
                    and self.cluster.servers[self.primaries[a.id]].alive]
         if not missing:
@@ -349,10 +526,18 @@ class FailLiteController:
         assignment = (self._heuristic_assign(missing, alpha=self.alpha)
                       if self.policy == "faillite"
                       else self._fullsize_assign(missing))
+        placed = {}
         for app_id, (variant, sid) in assignment.items():
-            key = self.cluster.place(app_id, variant, sid, "warm")
+            try:
+                key = self.cluster.place(app_id, variant, sid, "warm")
+            except ValueError:
+                continue           # capacity raced away; retry next sweep
             self.warm[app_id] = (variant, sid, key)
-        return assignment
+            self.cold_protected.discard(app_id)
+            self.ds.put(f"warm/{app_id}", {"server": sid,
+                                           "variant": variant.name})
+            placed[app_id] = (variant, sid)
+        return placed
 
     # -- metrics -----------------------------------------------------------
     def summarize(self, records=None) -> Dict[str, float]:
@@ -368,3 +553,7 @@ class FailLiteController:
                    / len(recovered) if recovered else 0.0)
         return {"recovery_rate": rate, "mttr_avg": mttr,
                 "accuracy_reduction": acc_red, "n": len(recs)}
+
+    def summarize_epochs(self) -> List[Dict[str, float]]:
+        """One summary dict per failure epoch, in injection order."""
+        return [self.summarize(recs) for recs in self.epoch_records]

@@ -54,6 +54,19 @@ class FailureDetector:
             self.last_seen.pop(server_id, None)
             self.failed.discard(server_id)
 
+    def mark_failed(self, server_id: str):
+        """External confirmation (e.g. scenario injection) that a node is
+        down; keeps sweep() from re-reporting it."""
+        with self._lock:
+            self.failed.add(server_id)
+
+    def revive(self, server_id: str):
+        """A node rejoined: treat its first heartbeat as just received so
+        it is no longer considered failed."""
+        with self._lock:
+            self.last_seen[server_id] = self.clock.now()
+            self.failed.discard(server_id)
+
     def sweep(self) -> List[str]:
         """Returns servers that newly crossed the failure threshold."""
         now = self.clock.now()

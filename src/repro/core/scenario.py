@@ -1,0 +1,292 @@
+"""Declarative failure scenarios — trace-driven fault injection.
+
+The paper evaluates one-shot server/site crashes; real edge deployments
+see *sequences* of correlated faults: cascades that spill across racks,
+rolling maintenance with rejoins, flaky nodes that crash repeatedly, and
+workload churn arriving mid-outage. A `Scenario` is a list of timed
+events the simulator replays deterministically from a seed, exercising
+the controller's re-entrant failure handling and the continuous
+re-protection loop.
+
+Event types:
+    ServerFail / SiteFail      crash one server / a whole failure domain
+    ServerRejoin               failed node returns (empty, gets refilled)
+    AppArrival / AppDeparture  workload churn
+    LoadSpike                  temporary request-rate multiplier
+
+Named library (`SCENARIOS`): single-server, site-outage, cascade,
+rolling-with-rejoin, churn-under-failure, flaky-node. Generators
+(`cascade_failures`, `rolling_failures`, `flaky_server`) compose into
+custom scenarios.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cluster import Cluster
+from repro.core.variants import Application, synthetic_family
+
+
+# ---------------------------------------------------------------------------
+# events
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ScenarioEvent:
+    t: float
+
+
+@dataclass(frozen=True)
+class ServerFail(ScenarioEvent):
+    server: str = ""
+
+
+@dataclass(frozen=True)
+class SiteFail(ScenarioEvent):
+    site: str = ""
+
+
+@dataclass(frozen=True)
+class ServerRejoin(ScenarioEvent):
+    server: str = ""
+
+
+@dataclass(frozen=True)
+class AppArrival(ScenarioEvent):
+    app: Optional[Application] = None
+
+
+@dataclass(frozen=True)
+class AppDeparture(ScenarioEvent):
+    app_id: str = ""
+
+
+@dataclass(frozen=True)
+class LoadSpike(ScenarioEvent):
+    factor: float = 2.0
+    duration: float = 5.0
+    app_ids: Optional[Tuple[str, ...]] = None     # None = every app
+
+
+FAILURE_EVENTS = (ServerFail, SiteFail)
+
+
+@dataclass
+class Scenario:
+    """A named, deterministic event trace."""
+    name: str
+    events: List[ScenarioEvent]
+    horizon: float                 # sim runs until horizon (post-settle)
+    description: str = ""
+
+    def sorted_events(self) -> List[ScenarioEvent]:
+        return sorted(self.events, key=lambda e: e.t)
+
+    @property
+    def n_failure_events(self) -> int:
+        return sum(1 for e in self.events
+                   if isinstance(e, FAILURE_EVENTS))
+
+    def validate(self, cluster: Cluster) -> None:
+        for e in self.events:
+            if e.t < 0:
+                raise ValueError(f"negative event time: {e}")
+            if isinstance(e, (ServerFail, ServerRejoin)) \
+                    and e.server not in cluster.servers:
+                raise ValueError(f"unknown server in {e}")
+            if isinstance(e, SiteFail) and e.site not in cluster.sites:
+                raise ValueError(f"unknown site in {e}")
+
+
+# ---------------------------------------------------------------------------
+# generators (compose into custom scenarios)
+# ---------------------------------------------------------------------------
+
+def _pick_servers(cluster: Cluster, rng: random.Random, n: int,
+                  site: Optional[str] = None) -> List[str]:
+    pool = (list(cluster.sites[site]) if site
+            else sorted(s.id for s in cluster.alive_servers()))
+    return rng.sample(pool, min(n, len(pool)))
+
+
+def cascade_failures(cluster: Cluster, rng: random.Random, *,
+                     t0: float = 1.0, waves: int = 3, per_wave: int = 2,
+                     gap: float = 4.0) -> List[ScenarioEvent]:
+    """Correlated cascade: failure waves every `gap` seconds, each wave
+    hitting servers co-located with the previous wave when possible
+    (overload/thermal spill inside a failure domain)."""
+    events: List[ScenarioEvent] = []
+    chosen: List[str] = []
+    site: Optional[str] = None
+    for w in range(waves):
+        pool = [sid for sid in
+                (cluster.sites[site] if site
+                 else sorted(cluster.servers))
+                if sid not in chosen]
+        if not pool:           # domain exhausted: spill to a new site
+            site = None
+            pool = [sid for sid in sorted(cluster.servers)
+                    if sid not in chosen]
+            if not pool:
+                break
+        hit = rng.sample(pool, min(per_wave, len(pool)))
+        chosen.extend(hit)
+        site = cluster.servers[hit[0]].site
+        events.extend(ServerFail(t=t0 + w * gap, server=sid)
+                      for sid in hit)
+    return events
+
+
+def rolling_failures(cluster: Cluster, rng: random.Random, *,
+                     n: int = 4, t0: float = 1.0, period: float = 4.0,
+                     downtime: float = 6.0,
+                     rejoin: bool = True) -> List[ScenarioEvent]:
+    """Rolling outage (maintenance-style): one server down every
+    `period` seconds, each rejoining `downtime` seconds later."""
+    events: List[ScenarioEvent] = []
+    for i, sid in enumerate(_pick_servers(cluster, rng, n)):
+        t_fail = t0 + i * period
+        events.append(ServerFail(t=t_fail, server=sid))
+        if rejoin:
+            events.append(ServerRejoin(t=t_fail + downtime, server=sid))
+    return events
+
+
+def flaky_server(cluster: Cluster, rng: random.Random, *,
+                 cycles: int = 3, t0: float = 1.0, up: float = 4.0,
+                 down: float = 2.0,
+                 server: Optional[str] = None) -> List[ScenarioEvent]:
+    """One node crash-looping: fails, rejoins, fails again."""
+    sid = server or _pick_servers(cluster, rng, 1)[0]
+    events: List[ScenarioEvent] = []
+    t = t0
+    for _ in range(cycles):
+        events.append(ServerFail(t=t, server=sid))
+        events.append(ServerRejoin(t=t + down, server=sid))
+        t += down + up
+    return events
+
+
+def churn_apps(rng: random.Random, *, n: int = 3, t0: float = 0.5,
+               spacing: float = 2.0, mem: float = 1.0e9,
+               spread: float = 5.0,
+               prefix: str = "late") -> List[ScenarioEvent]:
+    """A stream of app arrivals with fresh synthetic ladders."""
+    events: List[ScenarioEvent] = []
+    for i in range(n):
+        ladder = synthetic_family(f"{prefix}{i}", mem, n_variants=4,
+                                  spread=spread)
+        app = Application(id=f"{prefix}{i}", family=ladder[0].family,
+                          variants=ladder,
+                          request_rate=rng.uniform(0.5, 2.0),
+                          critical=(i % 2 == 0))
+        events.append(AppArrival(t=t0 + i * spacing, app=app))
+    return events
+
+
+# ---------------------------------------------------------------------------
+# named scenario library
+# ---------------------------------------------------------------------------
+
+def _single_server(cluster, apps, rng) -> Scenario:
+    sid = _pick_servers(cluster, rng, 1)[0]
+    return Scenario(
+        name="single-server",
+        events=[ServerFail(t=1.0, server=sid)],
+        horizon=30.0,
+        description="the paper's base case: one server crash")
+
+
+def _site_outage(cluster, apps, rng) -> Scenario:
+    site = rng.choice(sorted(cluster.sites))
+    return Scenario(
+        name="site-outage",
+        events=[SiteFail(t=1.0, site=site)],
+        horizon=40.0,
+        description="a whole failure domain (rack/pod) goes dark")
+
+
+def _cascade(cluster, apps, rng) -> Scenario:
+    events = cascade_failures(cluster, rng, t0=1.0, waves=3,
+                              per_wave=2, gap=4.0)
+    return Scenario(
+        name="cascade",
+        events=events,
+        horizon=45.0,
+        description="correlated cascade: three failure waves spilling "
+                    "through co-located servers")
+
+
+def _rolling_with_rejoin(cluster, apps, rng) -> Scenario:
+    events = rolling_failures(cluster, rng, n=4, t0=1.0, period=4.0,
+                              downtime=6.0, rejoin=True)
+    return Scenario(
+        name="rolling-with-rejoin",
+        events=events,
+        horizon=45.0,
+        description="rolling outage; every node rejoins empty and is "
+                    "re-filled by the re-protection loop")
+
+
+def _churn_under_failure(cluster, apps, rng) -> Scenario:
+    events: List[ScenarioEvent] = []
+    events += churn_apps(rng, n=3, t0=0.5, spacing=2.0)
+    # departures of existing apps (deterministic choice from the seed)
+    if apps:
+        leave = rng.sample(sorted(a.id for a in apps),
+                           min(2, len(apps)))
+        events += [AppDeparture(t=3.0 + i * 2.0, app_id=aid)
+                   for i, aid in enumerate(leave)]
+    events.append(LoadSpike(t=1.5, factor=3.0, duration=6.0))
+    events.append(ServerFail(t=2.5,
+                             server=_pick_servers(cluster, rng, 1)[0]))
+    return Scenario(
+        name="churn-under-failure",
+        events=events,
+        horizon=40.0,
+        description="arrivals, departures, and a load spike around a "
+                    "mid-churn server crash")
+
+
+def _flaky_node(cluster, apps, rng) -> Scenario:
+    events = flaky_server(cluster, rng, cycles=3, t0=1.0, up=5.0,
+                          down=2.0)
+    return Scenario(
+        name="flaky-node",
+        events=events,
+        horizon=40.0,
+        description="one node crash-looping three times; bookkeeping "
+                    "must not double-count repeated failures")
+
+
+ScenarioBuilder = Callable[[Cluster, Sequence[Application],
+                            random.Random], Scenario]
+
+SCENARIOS: Dict[str, ScenarioBuilder] = {
+    "single-server": _single_server,
+    "site-outage": _site_outage,
+    "cascade": _cascade,
+    "rolling-with-rejoin": _rolling_with_rejoin,
+    "churn-under-failure": _churn_under_failure,
+    "flaky-node": _flaky_node,
+}
+
+
+def build_scenario(name: str, cluster: Cluster,
+                   apps: Sequence[Application],
+                   seed: int = 0) -> Scenario:
+    """Materialize a named scenario deterministically from `seed`.
+
+    The scenario RNG is independent of the simulator's workload RNG, so
+    the same (name, seed, cluster) always yields the same event trace.
+    """
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"have {sorted(SCENARIOS)}")
+    rng = random.Random(f"{name}:{seed}")
+    sc = SCENARIOS[name](cluster, list(apps), rng)
+    sc.validate(cluster)
+    return sc

@@ -18,11 +18,15 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.core.cluster import Cluster, make_cluster
 from repro.core.controller import FailLiteController, LoadExecutor
 from repro.core.heartbeat import FailureDetector, SimClock
+from repro.core.scenario import (AppArrival, AppDeparture, LoadSpike,
+                                 Scenario, ScenarioEvent, ServerFail,
+                                 ServerRejoin, SiteFail, build_scenario)
 from repro.core.variants import (Application, Variant, build_ladder,
                                  synthetic_family, LOAD_BW)
 
 DETECT_SWEEP_S = 0.100        # controller sweep period (paper §5.1)
 HEARTBEAT_S = 0.020
+REPROTECT_SWEEP_S = 1.0       # continuous re-protection loop period
 
 
 class EventQueue:
@@ -62,6 +66,10 @@ class SimLoadExecutor(LoadExecutor):
 
     def activate(self, app, variant, server_id):
         pass  # warm: already resident
+
+    def reset_server(self, server_id):
+        """Crash/rejoin wipes the per-server load queue."""
+        self.busy_until.pop(server_id, None)
 
 
 @dataclass
@@ -136,6 +144,26 @@ class SimResult:
     records: dict
 
 
+@dataclass
+class ScenarioResult:
+    """Outcome of one deterministic scenario replay."""
+    name: str
+    n_epochs: int                       # handle_failures invocations
+    per_epoch: List[dict]               # summary per failure epoch
+    overall: dict                       # summary over ALL epoch records
+    warm_coverage: float                # critical apps warm-protected at end
+    unplaced_arrivals: int
+    n_apps_final: int
+    records: List[object]               # flat per-epoch RecoveryRecords
+
+    def fingerprint(self) -> tuple:
+        """Deterministic digest used by the determinism tests."""
+        return tuple(sorted(
+            (r.epoch, r.app_id, r.recovered, round(r.mttr, 9)
+             if r.mttr != float("inf") else -1.0, r.variant, r.mode)
+            for r in self.records))
+
+
 class Simulation:
     def __init__(self, cfg: SimConfig,
                  apps: Optional[List[Application]] = None):
@@ -155,6 +183,9 @@ class Simulation:
             detector=self.detector)
         self.apps = apps if apps is not None else synthetic_apps(
             cfg, self.rng)
+        # per-server "other tenants" reservation, recorded at setup so a
+        # rejoining (empty) server gets the same share re-blocked
+        self._blockers: Dict[str, float] = {}
 
     def setup(self):
         """Place primaries, block non-headroom capacity, plan warm backups.
@@ -172,16 +203,37 @@ class Simulation:
         self.apps = placed
 
         # block everything beyond `headroom` per server (other tenants)
-        from repro.core.variants import Variant
         for srv in self.cluster.alive_servers():
             excess = srv.free("mem") - self.cfg.headroom * srv.capacity["mem"]
             if excess > 0:
-                blocker = Variant(name="blocked", family="_reserved",
-                                  mem_bytes=excess, compute=0.0,
-                                  accuracy=0.0)
-                self.cluster.place("_reserved", blocker, srv.id, "primary")
+                self._blockers[srv.id] = excess
+                self._place_blocker(srv.id, excess)
         self.controller.plan_warm_backups()
         return self
+
+    def _place_blocker(self, server_id: str, mem: float):
+        blocker = Variant(name="blocked", family="_reserved",
+                          mem_bytes=mem, compute=0.0, accuracy=0.0)
+        self.cluster.place("_reserved", blocker, server_id, "primary")
+
+    def _schedule_failure(self, server_ids: List[str], t_fail: float):
+        """Crash at t_fail (instances die NOW); the controller reacts
+        after the detection latency (2 missed heartbeats + sweep
+        alignment, §5.7: ~65ms). Collecting the lost instances at crash
+        time keeps a rejoin inside the detection window consistent."""
+        def do_fail():
+            lost = []
+            for sid in server_ids:
+                lost.extend(self.cluster.fail_server(sid))
+                self.detector.mark_failed(sid)
+                self.executor.reset_server(sid)
+            t_detect = (self.detector.detection_latency_bound()
+                        + DETECT_SWEEP_S / 4)
+            self.events.after(t_detect, lambda: self.controller
+                              .handle_failures(list(server_ids), t_fail,
+                                               lost=lost))
+
+        self.events.at(t_fail, do_fail)
 
     def inject_failure(self, *, servers: Optional[List[str]] = None,
                        sites: Optional[List[str]] = None,
@@ -192,14 +244,7 @@ class Simulation:
         for site in (sites or []):
             failed.extend(self.cluster.sites[site])
 
-        def do_fail():
-            # detection: 2 missed heartbeats + sweep alignment (§5.7: ~65ms)
-            t_detect = (self.detector.detection_latency_bound()
-                        + DETECT_SWEEP_S / 4)
-            self.events.after(t_detect, lambda: self.controller
-                              .handle_failures(failed, t_fail))
-
-        self.events.at(t_fail, do_fail)
+        self._schedule_failure(failed, t_fail)
         self.events.run_until(t_fail + run_for)
 
         recs = self.controller.records
@@ -210,6 +255,108 @@ class Simulation:
             accuracy_reduction=summary["accuracy_reduction"],
             n_affected=summary["n"],
             records=recs)
+
+    # ------------------------------------------------------------------
+    # scenario replay
+    # ------------------------------------------------------------------
+    def _on_rejoin(self, server_id: str):
+        srv = self.cluster.servers[server_id]
+        if srv.alive:
+            return
+        self.controller.handle_rejoin(server_id)
+        # the node returns empty; re-block the other-tenant share so only
+        # (former primary share + headroom) is available for refilling
+        mem = self._blockers.get(server_id, 0.0)
+        if mem > 0:
+            self._place_blocker(server_id, mem)
+
+    def _on_arrival(self, app: Application, stats: dict):
+        try:
+            self.controller.deploy_primary(app)
+            self.apps.append(app)
+        except ValueError:
+            stats["unplaced_arrivals"] += 1
+
+    def _on_departure(self, app_id: str):
+        self.controller.handle_departure(app_id)
+        self.apps = [a for a in self.apps if a.id != app_id]
+
+    def _on_spike(self, ev: LoadSpike):
+        ids = set(ev.app_ids) if ev.app_ids is not None else None
+        targets = [a for a in self.apps
+                   if ids is None or a.id in ids]
+        saved = [(a, a.request_rate) for a in targets]
+        for a in targets:
+            a.request_rate *= ev.factor
+
+        def restore():
+            for a, r in saved:
+                a.request_rate = r
+        self.events.after(ev.duration, restore)
+
+    def run_scenario(self, scenario: Scenario, *,
+                     reprotect_every: float = REPROTECT_SWEEP_S,
+                     settle: float = 20.0) -> ScenarioResult:
+        """Replay a Scenario deterministically.
+
+        Failures go through detection latency; rejoining servers return
+        empty and are refilled; `controller.reprotect()` runs as a
+        periodic event-queue loop (continuous re-protection), replacing
+        the manual `replan_lost_backups` call."""
+        scenario.validate(self.cluster)
+        stats = {"unplaced_arrivals": 0}
+        for ev in scenario.sorted_events():
+            if isinstance(ev, ServerFail):
+                self._schedule_failure([ev.server], ev.t)
+            elif isinstance(ev, SiteFail):
+                self._schedule_failure(list(self.cluster.sites[ev.site]),
+                                       ev.t)
+            elif isinstance(ev, ServerRejoin):
+                self.events.at(ev.t, (lambda s=ev.server:
+                                      self._on_rejoin(s)))
+            elif isinstance(ev, AppArrival):
+                self.events.at(ev.t, (lambda a=ev.app:
+                                      self._on_arrival(a, stats)))
+            elif isinstance(ev, AppDeparture):
+                self.events.at(ev.t, (lambda a=ev.app_id:
+                                      self._on_departure(a)))
+            elif isinstance(ev, LoadSpike):
+                self.events.at(ev.t, (lambda e=ev: self._on_spike(e)))
+            else:
+                raise TypeError(f"unhandled scenario event: {ev}")
+
+        t_end = scenario.horizon + settle
+
+        def reprotect_tick():
+            self.controller.reprotect()
+            if self.clock.now() + reprotect_every <= t_end:
+                self.events.after(reprotect_every, reprotect_tick)
+
+        self.events.after(reprotect_every, reprotect_tick)
+        self.events.run_until(t_end)
+
+        ctl = self.controller
+        flat = [r for ep in ctl.epoch_records for r in ep.values()]
+        overall = ctl.summarize({i: r for i, r in enumerate(flat)})
+        crit = [a for a in ctl.apps.values() if a.critical
+                and ctl.primaries.get(a.id) in ctl.cluster.servers
+                and ctl.cluster.servers[ctl.primaries[a.id]].alive]
+        cov = (sum(1 for a in crit if a.id in ctl.warm) / len(crit)
+               if crit else 1.0)
+        return ScenarioResult(
+            name=scenario.name,
+            n_epochs=len(ctl.epoch_records),
+            per_epoch=ctl.summarize_epochs(),
+            overall=overall,
+            warm_coverage=cov,
+            unplaced_arrivals=stats["unplaced_arrivals"],
+            n_apps_final=len(ctl.apps),
+            records=flat)
+
+    def run_named_scenario(self, name: str, **kw) -> ScenarioResult:
+        sc = build_scenario(name, self.cluster, self.apps,
+                            seed=self.cfg.seed)
+        return self.run_scenario(sc, **kw)
 
 
 def run_policy_comparison(cfg: SimConfig, fail_servers: int = 1,
@@ -240,4 +387,23 @@ def run_policy_comparison(cfg: SimConfig, fail_servers: int = 1,
             agg["accuracy_reduction"] += res.accuracy_reduction
             n += 1
         out[policy] = {k: v / max(n, 1) for k, v in agg.items()}
+    return out
+
+
+def run_scenario_suite(cfg: SimConfig,
+                       names: Optional[List[str]] = None,
+                       policies=("faillite", "full-warm", "full-cold",
+                                 "full-warm-k")):
+    """Sweep every policy over the named scenario library. Each cell is
+    a fresh Simulation (same cfg+seed => same workload & event trace),
+    so policies are compared on identical fault sequences."""
+    from repro.core.scenario import SCENARIOS
+    names = list(names) if names is not None else sorted(SCENARIOS)
+    out: Dict[str, Dict[str, ScenarioResult]] = {}
+    for name in names:
+        out[name] = {}
+        for policy in policies:
+            c = SimConfig(**{**cfg.__dict__, "policy": policy})
+            sim = Simulation(c).setup()
+            out[name][policy] = sim.run_named_scenario(name)
     return out

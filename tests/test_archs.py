@@ -10,6 +10,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX compile-heavy: full CI tier only
+
 from repro import configs
 from repro.configs.shapes import SHAPES, applicable_cells
 from repro.launch.steps import make_train_step

@@ -6,7 +6,6 @@ import math
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.cluster import Cluster, RESOURCES, Server, make_cluster
 from repro.core.heuristic import faillite_heuristic, match
@@ -52,57 +51,9 @@ def test_int8_variant_halves_memory():
 
 
 # ---------------------------------------------------------------------------
-# Algorithm 1 properties
+# Algorithm 1 properties (hypothesis-based invariants for the heuristic
+# live in tests/test_properties.py, which skips without `hypothesis`)
 # ---------------------------------------------------------------------------
-
-@settings(max_examples=25, deadline=None)
-@given(seed=st.integers(0, 10_000),
-       n_apps=st.integers(1, 20),
-       n_servers=st.integers(2, 12),
-       alpha=st.floats(0.0, 0.5))
-def test_heuristic_feasible(seed, n_apps, n_servers, alpha):
-    """Placements never exceed per-server free capacity nor the α budget,
-    and never use excluded servers."""
-    rng = random.Random(seed)
-    cluster = make_cluster(1, n_servers, mem=16e9)
-    apps = _apps(rng, n_apps)
-    exclude = {a.id: {f"s0-{rng.randrange(n_servers)}"} for a in apps}
-    res = faillite_heuristic(apps, cluster, exclude=exclude, alpha=alpha)
-
-    used = {s.id: {r: 0.0 for r in RESOURCES}
-            for s in cluster.alive_servers()}
-    total = {r: 0.0 for r in RESOURCES}
-    for app_id, (v, sid) in res.assignment.items():
-        assert sid not in exclude[app_id]
-        for r in RESOURCES:
-            used[sid][r] += v.demand[r]
-            total[r] += v.demand[r]
-    for s in cluster.alive_servers():
-        for r in RESOURCES:
-            assert used[s.id][r] <= s.free(r) + 1e-6
-    free_total = cluster.total_free()
-    for r in RESOURCES:
-        assert total[r] <= (1 - alpha) * free_total[r] + 1e-6
-    # every app is either assigned or reported unplaced
-    assert (set(res.assignment) | set(res.unplaced)
-            == {a.id for a in apps})
-
-
-@settings(max_examples=25, deadline=None)
-@given(seed=st.integers(0, 10_000), delta=st.floats(0.01, 2.0))
-def test_match_selects_within_delta(seed, delta):
-    rng = random.Random(seed)
-    lad = synthetic_family("f", rng.uniform(1e9, 8e9), n_variants=5,
-                           spread=8.0)
-    j = match(lad, delta)
-    assert 0 <= j < len(lad)
-    if delta >= 1.0:
-        assert j == 0
-    elif j < len(lad) - 1:
-        # chosen variant obeys the δ bound (unless only smallest remains)
-        assert all(lad[j].demand[r] <= delta * lad[0].demand[r] + 1e-6
-                   for r in RESOURCES)
-
 
 def test_heuristic_prefers_larger_when_space():
     """upgrade_model: with abundant capacity every app gets its full model."""

@@ -2,6 +2,7 @@
 different device count with re-sharding — the training-side analogue of
 FailLite's progressive failover after pod loss."""
 
+import os
 import subprocess
 import sys
 
@@ -42,9 +43,14 @@ leaf = jax.tree_util.tree_leaves(params_r)[0]
 assert len(leaf.devices()) >= 1
 print("ELASTIC-RESTORE-OK")
 """
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"},
-                         cwd="/root/repo")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=300, cwd=root,
+        # sanitized env; JAX_PLATFORMS=cpu keeps a locally-installed TPU
+        # plugin from probing cloud metadata (hangs in sandboxes)
+        env={"PYTHONPATH": os.path.join(root, "src"),
+             "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+             "HOME": os.environ.get("HOME", "/tmp"),
+             "JAX_PLATFORMS": "cpu"})
     assert "ELASTIC-RESTORE-OK" in out.stdout, out.stderr[-2000:]

@@ -94,6 +94,35 @@ def test_warm_reclamation_on_widespread_failure():
     assert len(sim.controller.warm) <= n_warm_before
 
 
+def test_reclamation_evicts_warm_but_keeps_cold_protection():
+    """_reclaim_and_assign under site-scale failure: stranded warm
+    backups of unaffected apps are evicted to make room, and the evicted
+    apps are demoted to cold protection — still recoverable."""
+    cfg = SimConfig(n_sites=10, servers_per_site=3, policy="faillite",
+                    seed=0, site_independence=True, headroom=0.2)
+    sim = Simulation(cfg).setup()
+    ctl = sim.controller
+    res = sim.inject_failure(sites=list(sim.cluster.sites)[:5])
+    assert res.recovery_rate > 0.9
+    assert ctl.cold_protected, "expected warm-backup eviction"
+    for app_id in ctl.cold_protected:
+        assert app_id not in ctl.warm
+        assert ctl.ds.get(f"warm/{app_id}") is None
+        assert ctl.ds.get(f"cold/{app_id}") is not None
+    # cold protection is real: kill an evicted app's primary and it
+    # still comes back via the progressive cold path (second epoch)
+    victim = next(a for a in sorted(ctl.cold_protected)
+                  if ctl.primaries.get(a)
+                  and sim.cluster.servers[ctl.primaries[a]].alive)
+    t = sim.clock.now()
+    ctl.handle_failures([ctl.primaries[victim]], t)
+    sim.events.run_until(t + 30.0)
+    rec = ctl.records[victim]
+    assert rec.epoch == 1
+    assert rec.recovered
+    assert rec.mode in ("cold", "cold-progressive")
+
+
 def test_mttr_accounting_includes_detection_and_notify():
     _, res = _run("faillite", headroom=0.4, critical_frac=1.0)
     for r in res.records.values():

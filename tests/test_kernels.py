@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX compile-heavy: full CI tier only
+
 ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
 

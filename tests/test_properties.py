@@ -1,0 +1,114 @@
+"""Hypothesis property tests (placement invariants, sharding specs).
+
+Kept in their own module so environments without `hypothesis` still run
+the full deterministic tier-1 suite; here the whole module skips.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.cluster import RESOURCES, make_cluster  # noqa: E402
+from repro.core.heuristic import faillite_heuristic, match  # noqa: E402
+from repro.core.variants import Application, synthetic_family  # noqa: E402
+
+
+def _apps(rng, n, mem_range=(0.5e9, 4e9), spread=6.0, critical_frac=0.5):
+    out = []
+    for i in range(n):
+        lad = synthetic_family(f"f{i}", rng.uniform(*mem_range),
+                               n_variants=4, spread=spread)
+        out.append(Application(id=f"a{i}", family=f"f{i}", variants=lad,
+                               request_rate=rng.uniform(0.5, 2.0),
+                               critical=rng.random() < critical_frac))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n_apps=st.integers(1, 20),
+       n_servers=st.integers(2, 12),
+       alpha=st.floats(0.0, 0.5))
+def test_heuristic_feasible(seed, n_apps, n_servers, alpha):
+    """Placements never exceed per-server free capacity nor the α budget,
+    and never use excluded servers."""
+    rng = random.Random(seed)
+    cluster = make_cluster(1, n_servers, mem=16e9)
+    apps = _apps(rng, n_apps)
+    exclude = {a.id: {f"s0-{rng.randrange(n_servers)}"} for a in apps}
+    res = faillite_heuristic(apps, cluster, exclude=exclude, alpha=alpha)
+
+    used = {s.id: {r: 0.0 for r in RESOURCES}
+            for s in cluster.alive_servers()}
+    total = {r: 0.0 for r in RESOURCES}
+    for app_id, (v, sid) in res.assignment.items():
+        assert sid not in exclude[app_id]
+        for r in RESOURCES:
+            used[sid][r] += v.demand[r]
+            total[r] += v.demand[r]
+    for s in cluster.alive_servers():
+        for r in RESOURCES:
+            assert used[s.id][r] <= s.free(r) + 1e-6
+    free_total = cluster.total_free()
+    for r in RESOURCES:
+        assert total[r] <= (1 - alpha) * free_total[r] + 1e-6
+    # every app is either assigned or reported unplaced
+    assert (set(res.assignment) | set(res.unplaced)
+            == {a.id for a in apps})
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), delta=st.floats(0.01, 2.0))
+def test_match_selects_within_delta(seed, delta):
+    rng = random.Random(seed)
+    lad = synthetic_family("f", rng.uniform(1e9, 8e9), n_variants=5,
+                           spread=8.0)
+    j = match(lad, delta)
+    assert 0 <= j < len(lad)
+    if delta >= 1.0:
+        assert j == 0
+    elif j < len(lad) - 1:
+        # chosen variant obeys the δ bound (unless only smallest remains)
+        assert all(lad[j].demand[r] <= delta * lad[0].demand[r] + 1e-6
+                   for r in RESOURCES)
+
+
+# ---------------------------------------------------------------------------
+# sharding-spec properties
+# ---------------------------------------------------------------------------
+
+class FakeMesh:
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        self.devices = np.empty(tuple(sizes.values()))
+        self.axis_sizes = tuple(sizes.values())
+
+
+@settings(max_examples=50, deadline=None)
+@given(d0=st.sampled_from([1, 2, 3, 8, 16, 64, 256]),
+       d1=st.sampled_from([1, 2, 5, 16, 128, 151936]),
+       data=st.sampled_from([1, 2, 4, 16]),
+       model=st.sampled_from([1, 2, 4, 16]))
+def test_filter_spec_always_divisible(d0, d1, data, model):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel import sharding as SH
+
+    mesh = FakeMesh({"data": data, "model": model})
+    spec = SH.filter_spec(P(("pod", "data"), "model"), mesh, (d0, d1))
+    sizes = {"data": data, "model": model}
+    for dim, entry in zip((d0, d1), spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        f = int(np.prod([sizes[a] for a in axes]))
+        assert dim % f == 0
+        assert "pod" not in axes            # absent axes dropped

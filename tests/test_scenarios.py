@@ -1,0 +1,225 @@
+"""Failure-scenario engine: deterministic replay, rejoin re-fill,
+repeated-failure (multi-epoch) bookkeeping, churn, and the continuous
+re-protection loop."""
+
+import pytest
+
+from repro.core.scenario import (SCENARIOS, AppArrival, AppDeparture,
+                                 LoadSpike, Scenario, ServerFail,
+                                 ServerRejoin, SiteFail, build_scenario)
+from repro.core.simulation import SimConfig, Simulation, run_scenario_suite
+
+REQUIRED = ["single-server", "site-outage", "cascade",
+            "rolling-with-rejoin", "churn-under-failure"]
+
+
+def _sim(**kw):
+    base = dict(n_sites=4, servers_per_site=5, headroom=0.2,
+                policy="faillite", seed=0)
+    base.update(kw)
+    return Simulation(SimConfig(**base)).setup()
+
+
+# ---------------------------------------------------------------------------
+# library + determinism
+# ---------------------------------------------------------------------------
+
+def test_scenario_library_covers_required_classes():
+    assert set(REQUIRED) <= set(SCENARIOS)
+    assert len(SCENARIOS) >= 5
+    sim = _sim()
+    for name in SCENARIOS:
+        sc = build_scenario(name, sim.cluster, sim.apps, seed=0)
+        assert sc.events, name
+        sc.validate(sim.cluster)
+
+
+def test_scenario_build_deterministic_from_seed():
+    sim = _sim()
+    for name in SCENARIOS:
+        a = build_scenario(name, sim.cluster, sim.apps, seed=7)
+        b = build_scenario(name, sim.cluster, sim.apps, seed=7)
+        assert a.sorted_events() == b.sorted_events(), name
+
+
+@pytest.mark.parametrize("name", ["cascade", "rolling-with-rejoin",
+                                  "churn-under-failure"])
+def test_scenario_replay_deterministic(name):
+    res_a = _sim(seed=3).run_named_scenario(name)
+    res_b = _sim(seed=3).run_named_scenario(name)
+    assert res_a.fingerprint() == res_b.fingerprint()
+    assert res_a.per_epoch == res_b.per_epoch
+    assert res_a.warm_coverage == res_b.warm_coverage
+
+
+# ---------------------------------------------------------------------------
+# rejoin re-fill
+# ---------------------------------------------------------------------------
+
+def test_rejoin_refills_returned_servers():
+    sim = _sim()
+    sc = build_scenario("rolling-with-rejoin", sim.cluster, sim.apps,
+                        seed=0)
+    rejoined = {e.server for e in sc.events
+                if isinstance(e, ServerRejoin)}
+    assert rejoined
+    res = sim.run_scenario(sc)
+    # every server is back alive
+    assert all(s.alive for s in sim.cluster.servers.values())
+    # re-protection converged: every critical app warm-protected again
+    assert res.warm_coverage == 1.0
+    assert res.overall["recovery_rate"] == 1.0
+    # at least one rejoined (empty) server was re-filled with real work
+    refilled = [sid for sid in rejoined
+                if any(i.app_id != "_reserved"
+                       for i in sim.cluster.servers[sid].instances.values())]
+    assert refilled
+    # the other-tenant share got re-blocked on rejoin
+    for sid in rejoined:
+        assert any(i.app_id == "_reserved"
+                   for i in sim.cluster.servers[sid].instances.values())
+
+
+def test_rejoin_within_detection_window():
+    """A node that bounces back faster than failure detection (~65ms)
+    must still end up alive, and the apps whose state died in the crash
+    must still be recovered (their instances are gone either way)."""
+    sim = _sim()
+    victim = sim.controller.primaries[sim.apps[0].id]
+    n_primaries = sum(1 for i in
+                      sim.cluster.servers[victim].instances.values()
+                      if i.role == "primary" and i.app_id != "_reserved")
+    sc = Scenario(name="fast-bounce", horizon=20.0, events=[
+        ServerFail(t=1.0, server=victim),
+        ServerRejoin(t=1.03, server=victim),   # before detection fires
+    ])
+    res = sim.run_scenario(sc)
+    assert sim.cluster.servers[victim].alive
+    assert res.n_epochs == 1
+    assert res.overall["n"] == n_primaries
+    assert res.overall["recovery_rate"] == 1.0
+
+
+def test_rejected_arrival_leaves_no_state():
+    """deploy_primary must not leak an unplaceable app into controller
+    bookkeeping."""
+    sim = _sim(n_sites=1, servers_per_site=2, headroom=0.05)
+    from repro.core.variants import Application, synthetic_family
+    ladder = synthetic_family("huge", 64e9, n_variants=2, spread=1.5)
+    app = Application(id="huge0", family="huge", variants=ladder)
+    with pytest.raises(ValueError):
+        sim.controller.deploy_primary(app)
+    assert "huge0" not in sim.controller.apps
+    assert "huge0" not in sim.controller.primaries
+    assert not sim.cluster.instances_of("huge0")
+
+
+def test_unrecovered_apps_retry_after_rejoin():
+    """Capacity-starved failure: apps that cannot place stay down until
+    servers rejoin, then the re-protection loop recovers them with MTTR
+    counted from the ORIGINAL failure."""
+    sim = _sim(n_sites=2, servers_per_site=2, headroom=0.15,
+               critical_frac=0.0)
+    sids = sorted(sim.cluster.servers)
+    sc = Scenario(name="starve", horizon=30.0, events=[
+        ServerFail(t=1.0, server=sids[0]),
+        ServerFail(t=1.2, server=sids[1]),
+        ServerFail(t=1.4, server=sids[2]),
+        ServerRejoin(t=10.0, server=sids[0]),
+        ServerRejoin(t=12.0, server=sids[1]),
+    ])
+    res = sim.run_scenario(sc)
+    assert res.n_epochs == 3
+    late = [r for r in res.records if r.recovered and r.mttr > 5.0]
+    assert late, "expected retried recoveries after the rejoins"
+    for r in late:
+        assert r.mode in ("cold", "cold-progressive")
+        assert r.epoch < res.n_epochs
+
+
+# ---------------------------------------------------------------------------
+# repeated failures / epochs
+# ---------------------------------------------------------------------------
+
+def test_flaky_node_produces_one_epoch_per_crash():
+    sim = _sim()
+    res = sim.run_named_scenario("flaky-node")
+    assert res.n_epochs == 3           # three crash cycles
+    assert len(sim.controller.epoch_records) == 3
+    for ep, recs in enumerate(sim.controller.epoch_records):
+        for rec in recs.values():
+            assert rec.epoch == ep
+    assert res.overall["recovery_rate"] == 1.0
+
+
+def test_cascade_multi_epoch_bookkeeping():
+    sim = _sim()
+    res = sim.run_named_scenario("cascade")
+    assert res.n_epochs >= 3           # one epoch per wave at least
+    # per-epoch records are disjoint snapshots; the legacy flat view
+    # keeps only the latest record per app
+    flat_ids = [r.app_id for ep in sim.controller.epoch_records
+                for r in ep.values()]
+    assert len(flat_ids) == len(res.records)
+    assert set(sim.controller.records) == set(flat_ids)
+    assert res.per_epoch == sim.controller.summarize_epochs()
+
+
+def test_double_failure_of_same_server_is_idempotent():
+    sim = _sim()
+    sid = sorted(sim.cluster.servers)[0]
+    sc = Scenario(name="dup", horizon=20.0, events=[
+        ServerFail(t=1.0, server=sid),
+        ServerFail(t=5.0, server=sid),      # already dead: no-op epoch
+    ])
+    res = sim.run_scenario(sc)
+    assert res.n_epochs == 2
+    assert len(sim.controller.epoch_records[0]) > 0
+    assert len(sim.controller.epoch_records[1]) == 0
+
+
+# ---------------------------------------------------------------------------
+# churn
+# ---------------------------------------------------------------------------
+
+def test_churn_under_failure_bookkeeping():
+    sim = _sim()
+    n0 = len(sim.apps)
+    rates0 = {a.id: a.request_rate for a in sim.apps}
+    sc = build_scenario("churn-under-failure", sim.cluster, sim.apps,
+                        seed=0)
+    arrivals = [e for e in sc.events if isinstance(e, AppArrival)]
+    departures = [e for e in sc.events if isinstance(e, AppDeparture)]
+    assert arrivals and departures
+    res = sim.run_scenario(sc)
+
+    ctl = sim.controller
+    for e in departures:
+        assert e.app_id not in ctl.apps
+        assert not sim.cluster.instances_of(e.app_id)
+    placed_late = [e.app.id for e in arrivals if e.app.id in ctl.apps]
+    assert len(placed_late) + res.unplaced_arrivals == len(arrivals)
+    assert res.n_apps_final == n0 + len(placed_late) - len(departures)
+    # load-spike multiplier was restored after its duration
+    for a in sim.apps:
+        if a.id in rates0:
+            assert a.request_rate == pytest.approx(rates0[a.id])
+    # new critical arrivals got warm protection from the reprotect loop
+    for e in arrivals:
+        if e.app.critical and e.app.id in ctl.apps:
+            assert e.app.id in ctl.warm
+
+
+# ---------------------------------------------------------------------------
+# policy sweep (the CI-smoke entry point)
+# ---------------------------------------------------------------------------
+
+def test_scenario_suite_sweeps_policies():
+    cfg = SimConfig(n_sites=3, servers_per_site=3, headroom=0.25, seed=0)
+    suite = run_scenario_suite(cfg, names=["single-server", "flaky-node"],
+                               policies=("faillite", "full-cold"))
+    for name, by_policy in suite.items():
+        assert set(by_policy) == {"faillite", "full-cold"}
+        for res in by_policy.values():
+            assert res.n_epochs >= 1
+            assert len(res.per_epoch) == res.n_epochs

@@ -9,6 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX compile-heavy: full CI tier only
+
 from repro import configs
 from repro.models import model as MDL
 from repro.serving.engine import InferenceEngine, Request

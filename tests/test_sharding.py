@@ -8,10 +8,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel import sharding as SH
+
+# The filter_spec divisibility property test lives in
+# tests/test_properties.py (hypothesis-based, skips without the dep).
 
 
 class FakeMesh:
@@ -19,24 +21,6 @@ class FakeMesh:
         self.axis_names = tuple(sizes)
         self.devices = np.empty(tuple(sizes.values()))
         self.axis_sizes = tuple(sizes.values())
-
-
-@settings(max_examples=50, deadline=None)
-@given(d0=st.sampled_from([1, 2, 3, 8, 16, 64, 256]),
-       d1=st.sampled_from([1, 2, 5, 16, 128, 151936]),
-       data=st.sampled_from([1, 2, 4, 16]),
-       model=st.sampled_from([1, 2, 4, 16]))
-def test_filter_spec_always_divisible(d0, d1, data, model):
-    mesh = FakeMesh({"data": data, "model": model})
-    spec = SH.filter_spec(P(("pod", "data"), "model"), mesh, (d0, d1))
-    sizes = {"data": data, "model": model}
-    for dim, entry in zip((d0, d1), spec):
-        if entry is None:
-            continue
-        axes = entry if isinstance(entry, tuple) else (entry,)
-        f = int(np.prod([sizes[a] for a in axes]))
-        assert dim % f == 0
-        assert "pod" not in axes            # absent axes dropped
 
 
 def test_param_specs_cover_all_archs():
@@ -93,12 +77,20 @@ shape = ShapeCell("t", "train", 64, 8)
 lowered, compiled = _lower_one(cfg, shape, mesh, AdamW())
 assert compiled.memory_analysis().temp_size_in_bytes >= 0
 cost = compiled.cost_analysis()
+if isinstance(cost, list):      # older jaxlib: one dict per computation
+    cost = cost[0] if cost else {}
 assert cost.get("flops", 0) > 0
 print("SMALL-MESH-DRYRUN-OK")
 """
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"},
-                         cwd="/root/repo")
+    import os
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=300, cwd=root,
+        # sanitized env; JAX_PLATFORMS=cpu keeps a locally-installed TPU
+        # plugin from probing cloud metadata (hangs in sandboxes)
+        env={"PYTHONPATH": os.path.join(root, "src"),
+             "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+             "HOME": os.environ.get("HOME", "/tmp"),
+             "JAX_PLATFORMS": "cpu"})
     assert "SMALL-MESH-DRYRUN-OK" in out.stdout, out.stderr[-2000:]
