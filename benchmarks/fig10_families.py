@@ -17,7 +17,9 @@ def run(quick: bool = True):
     rows = []
     for cls in classes:
         for policy in policies:
-            cfg = SimConfig(policy=policy, seed=0, headroom=0.2, **scale)
+            # controller metrics only: skip the traffic plane
+            cfg = SimConfig(policy=policy, seed=0, headroom=0.2,
+                            traffic_rate_scale=0.0, **scale)
             rng = random.Random(cfg.seed)
             apps = synthetic_apps(cfg, rng, family_class=cls)
             sim = Simulation(cfg, apps=apps).setup()

@@ -14,9 +14,11 @@ def run(quick: bool = True):
     rows = []
     for policy in policies:
         for nf in fails:
+            # controller metrics only: skip the traffic plane
             cfg = SimConfig(n_sites=10, servers_per_site=10 if not quick
                             else 3, policy=policy, seed=0, headroom=0.2,
-                            site_independence=True)
+                            site_independence=True,
+                            traffic_rate_scale=0.0)
             sim = Simulation(cfg).setup()
             sites = list(sim.cluster.sites)[:nf]
             res = sim.inject_failure(sites=sites)

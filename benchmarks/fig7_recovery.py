@@ -1,6 +1,12 @@
 """Fig. 7 + §5.7 overheads — real mini-testbed: recovery rate and MTTR
 across FailLite and the three full-size baselines, real failure
 injection, real (compile-bound) model loads, client-observed downtime.
+
+Reports controller MTTR (`ctl_mttr_ms`) next to the client-observed
+downtime measured from the request stream (`client_mttr_ms`) — the
+wall-clock analogue of the request-level metrics the simulator's
+traffic plane produces (see core/metrics.py and benchmarks/scenarios.py
+for the simulated counterpart).
 """
 
 from __future__ import annotations
@@ -14,8 +20,8 @@ def run(quick: bool = True):
               "qwen3-moe-30b-a3b"])
     policies = (["faillite", "full-warm-k"] if quick
                 else ["faillite", "full-warm", "full-cold", "full-warm-k"])
-    print("# fig7: policy,n,recovery_rate,mttr_ms,acc_red_pct,"
-          "detect_ms,client_downtime_ms")
+    print("# fig7: policy,n,recovery_rate,ctl_mttr_ms,acc_red_pct,"
+          "detect_ms,client_mttr_ms")
     rows = []
     for policy in policies:
         tb = MiniTestbed(apps_per_arch=1, archs=archs, seed=2,

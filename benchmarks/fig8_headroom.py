@@ -19,8 +19,9 @@ def run(quick: bool = True):
             acc = {"r": 0.0, "m": 0.0, "a": 0.0}
             n = 0
             for seed in seeds:
+                # controller metrics only: skip the traffic plane
                 cfg = SimConfig(headroom=h, policy=policy, seed=seed,
-                                **scale)
+                                traffic_rate_scale=0.0, **scale)
                 sim = Simulation(cfg).setup()
                 victim = sim.rng.choice(sim.cluster.alive_servers()).id
                 res = sim.inject_failure(servers=[victim])

@@ -13,8 +13,9 @@ def run(quick: bool = True):
     print("# fig9: K,recovery_rate,mttr_ms,acc_red_pct")
     rows = []
     for k in ks:
+        # controller metrics only: skip the traffic plane
         cfg = SimConfig(critical_frac=k, policy="faillite", seed=0,
-                        headroom=0.2, **scale)
+                        headroom=0.2, traffic_rate_scale=0.0, **scale)
         sim = Simulation(cfg).setup()
         victim = sim.rng.choice(sim.cluster.alive_servers()).id
         res = sim.inject_failure(servers=[victim])

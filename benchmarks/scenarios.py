@@ -1,14 +1,30 @@
 """Scenario sweep — all four policies over the named failure-scenario
 library (cascades, rolling rejoin, churn, flaky nodes, ...).
 
-Beyond the paper's one-shot injections: recovery-rate / MTTR / accuracy
-are reported PER FAILURE EPOCH, so repeated-failure degradation and
-re-protection recovery are visible.
+Beyond the paper's one-shot injections, every cell reports BOTH planes:
+
+  * control plane, PER FAILURE EPOCH: recovery rate / controller MTTR /
+    accuracy reduction, so repeated-failure degradation and
+    re-protection recovery are visible;
+  * request plane (what clients experienced, §5.7 framing): availability,
+    client-observed MTTR, accuracy-weighted goodput, dropped/degraded/
+    SLO-violated request counts, and latency-proxy percentiles.
+
+Client-observed MTTR upper-bounds controller MTTR: clients keep failing
+from the crash instant (before detection) until the re-route push
+reaches them and a request actually succeeds.
 
     PYTHONPATH=src python -m benchmarks.run --only scenarios
 """
 
 from __future__ import annotations
+
+
+def _ms(seconds: float) -> float:
+    """Milliseconds, with the same -1.0 sentinel the controller MTTR
+    column uses for 'nothing recovered' (inf)."""
+    import math
+    return seconds * 1e3 if math.isfinite(seconds) else -1.0
 
 
 def run(quick: bool = True):
@@ -25,25 +41,42 @@ def run(quick: bool = True):
     cfg = SimConfig(headroom=0.2, seed=0, **scale)
 
     print("# scenarios: scenario,policy,epoch,n,recovery_rate,"
-          "mttr_ms,acc_red_pct,warm_cov,unplaced_arrivals")
+          "ctl_mttr_ms,acc_red_pct,warm_cov,unplaced,"
+          "req_dropped,client_mttr_ms")
+    print("# scenarios-traffic: scenario,policy,req_offered,availability,"
+          "client_mttr_ms,goodput,degraded,slo_viol,p50_ms,p99_ms")
     suite = run_scenario_suite(cfg, names=names)
     for name in names:
         for policy, res in suite[name].items():
             for ep, s in enumerate(res.per_epoch):
                 mttr = (s["mttr_avg"] * 1e3
                         if s["mttr_avg"] != float("inf") else -1.0)
+                te = (res.traffic.epoch_row(ep) if res.traffic
+                      else {"n_dropped": 0, "client_mttr_avg": 0.0})
                 print(f"scenarios,{name},{policy},{ep},{s['n']},"
                       f"{s['recovery_rate']:.3f},{mttr:.1f},"
                       f"{s['accuracy_reduction']*100:.2f},"
                       f"{res.warm_coverage:.2f},"
-                      f"{res.unplaced_arrivals}")
+                      f"{res.unplaced_arrivals},"
+                      f"{te['n_dropped']},"
+                      f"{_ms(te['client_mttr_avg']):.1f}")
             o = res.overall
             mttr = (o["mttr_avg"] * 1e3
                     if o["mttr_avg"] != float("inf") else -1.0)
+            t = res.traffic
             print(f"scenarios,{name},{policy},overall,{o['n']},"
                   f"{o['recovery_rate']:.3f},{mttr:.1f},"
                   f"{o['accuracy_reduction']*100:.2f},"
-                  f"{res.warm_coverage:.2f},{res.unplaced_arrivals}")
+                  f"{res.warm_coverage:.2f},{res.unplaced_arrivals},"
+                  f"{t.n_dropped if t else 0},"
+                  f"{_ms(t.client_mttr_avg) if t else 0.0:.1f}")
+            if t is not None:
+                print(f"scenarios-traffic,{name},{policy},{t.n_offered},"
+                      f"{t.availability:.5f},"
+                      f"{_ms(t.client_mttr_avg):.1f},"
+                      f"{t.goodput:.5f},{t.n_degraded},"
+                      f"{t.n_slo_violated},{t.latency_p50*1e3:.1f},"
+                      f"{t.latency_p99*1e3:.1f}")
 
 
 if __name__ == "__main__":

@@ -29,7 +29,7 @@ def main():
     res = sim.inject_failure(servers=[victim])
 
     print(f"\nrecovery rate: {res.recovery_rate:.0%}   "
-          f"mean MTTR: {res.mttr_avg*1e3:.0f} ms   "
+          f"mean controller MTTR: {res.mttr_avg*1e3:.0f} ms   "
           f"accuracy cost: {res.accuracy_reduction:.2%}")
     for app_id, rec in sorted(res.records.items()):
         if rec.recovered:
@@ -39,6 +39,19 @@ def main():
                   f"{rec.variant}{extra}")
         else:
             print(f"  {app_id:8s} NOT RECOVERED")
+
+    # what the CLIENTS saw (request-level traffic plane, paper §5.7)
+    t = res.traffic
+    if t is not None:
+        print(f"\nclient view over {t.n_offered} requests:")
+        print(f"  availability: {t.availability:.4%}   "
+              f"dropped: {t.n_dropped}   "
+              f"degraded: {t.n_degraded}   "
+              f"SLO-violated: {t.n_slo_violated}")
+        print(f"  client-observed MTTR: {t.client_mttr_avg*1e3:.0f} ms   "
+              f"accuracy-weighted goodput: {t.goodput:.4f}")
+        print(f"  latency proxy p50/p99: {t.latency_p50*1e3:.1f}/"
+              f"{t.latency_p99*1e3:.1f} ms")
 
 
 if __name__ == "__main__":

@@ -65,16 +65,30 @@ class RecoveryRecord:
 
 @dataclass
 class RoutingTable:
+    """Epoch-versioned client routes (the paper's websocket push, §4).
+
+    Every `set`/`drop` bumps `epoch` and fires the corresponding
+    observer, so the bump sequence defines exactly which in-flight
+    request window a failure blacks out: the traffic plane
+    (core/traffic.py) subscribes via `observer`/`drop_observer` to
+    timestamp those transitions into per-app serving timelines.
+    """
     epoch: int = 0
     routes: Dict[str, Tuple[str, str]] = field(default_factory=dict)
+    observer: Optional[Callable[[str, str, str], None]] = None
+    drop_observer: Optional[Callable[[str], None]] = None
 
     def set(self, app_id: str, server_id: str, variant_name: str):
         self.routes[app_id] = (server_id, variant_name)
         self.epoch += 1
+        if self.observer is not None:
+            self.observer(app_id, server_id, variant_name)
 
     def drop(self, app_id: str):
         if self.routes.pop(app_id, None) is not None:
             self.epoch += 1
+            if self.drop_observer is not None:
+                self.drop_observer(app_id)
 
 
 class FailLiteController:

@@ -1,0 +1,256 @@
+"""Request-level outcome metrics — the aggregation half of the traffic
+plane (paper §5.7: client-observed MTTR and accuracy loss).
+
+Every generated request is classified, vectorized with numpy, against
+its application's serving timeline (recorded by `core/traffic.py` from
+routing-table epoch bumps and crash instants) into one of:
+
+  * **served** — a live replica answered; carries that replica variant's
+    accuracy and a latency proxy,
+  * **served-degraded** — served, but by a smaller-than-full variant
+    (progressive failover in flight, or a heterogeneous warm backup),
+  * **SLO-violated** — served, but the latency proxy exceeded the app's
+    ``latency_slo`` (queueing blow-up under a LoadSpike, for example),
+  * **dropped** — arrived inside a downtime window: the serving replica
+    was dead and no re-route had reached the client yet.
+
+The latency proxy is ``service_time / (1 - utilization)`` with lognormal
+jitter — an M/M/1-shaped stand-in that responds to the variant size
+(smaller variants are faster) and to the instantaneous request rate
+(spikes push p99 and SLO violations), without simulating queues
+per-request.
+
+Aggregates reported per run and per failure epoch:
+
+  * **availability** — served / offered (departed-app residue excluded),
+  * **accuracy-weighted goodput** — Σ accuracy over requests served
+    within SLO, / offered: one number folding drops, degradation, and
+    SLO misses together (1.0 = every request answered at full quality),
+  * **latency p50/p99** of the proxy over served requests,
+  * **downtime windows** — per (app, failure-epoch) blackout intervals,
+    with the number of requests they swallowed, and
+  * **client-observed MTTR** — per window, first *served* request after
+    the route was restored minus the crash instant. This is the
+    request-level analogue of the paper's 175.5 ms: it upper-bounds the
+    controller's own MTTR (detection + load + notify) because clients
+    also pay route propagation and arrival discretization.
+
+Determinism guarantees: classification is a pure function of the
+recorded timelines, the arrival arrays, and a PCG64 jitter stream seeded
+from (simulation seed, stable app index) — same seed ⇒ identical
+per-request trace and identical summary, regardless of wall clock or
+dict iteration order (apps are processed in sorted-id order).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+# serving-timeline states (core/traffic.py appends transitions)
+UP, DOWN, GONE = 0, 1, 2
+
+
+@dataclass
+class DowntimeWindow:
+    """One client-visible blackout: [crash instant, route restored)."""
+    app_id: str
+    epoch: int                     # failure epoch that opened the window
+    t_start: float                 # the serving replica's crash instant
+    t_end: float = math.inf        # route restored (+notify); inf = never
+    n_dropped: int = 0             # requests that arrived inside
+    t_first_served: float = math.inf   # first served request after t_end
+
+    @property
+    def recovered(self) -> bool:
+        return math.isfinite(self.t_end)
+
+    @property
+    def duration(self) -> float:
+        """Control-plane view: route-outage length."""
+        return self.t_end - self.t_start
+
+    @property
+    def client_downtime(self) -> float:
+        """Request-level view: gap until a request actually succeeded."""
+        if not self.recovered:
+            return math.inf
+        if math.isfinite(self.t_first_served):
+            return self.t_first_served - self.t_start
+        return self.duration          # no arrivals after restore
+
+
+@dataclass
+class AppLog:
+    """Classified per-request arrays for one application."""
+    app_id: str
+    arrivals: np.ndarray           # sorted arrival times
+    served: np.ndarray             # bool
+    dropped: np.ndarray            # bool (downtime)
+    offered: np.ndarray            # bool (False = pre-deploy / departed)
+    degraded: np.ndarray           # bool (served below full accuracy)
+    slo_violated: np.ndarray       # bool (served but proxy > SLO)
+    accuracy: np.ndarray           # serving accuracy (nan if not served)
+    latency: np.ndarray            # latency proxy (nan if not served)
+
+
+def classify_app(app_id: str, arrivals: np.ndarray, rates: np.ndarray,
+                 times: np.ndarray, states: np.ndarray,
+                 accs: np.ndarray, svcs: np.ndarray, *,
+                 full_accuracy: float, slo: float,
+                 jitter_rng: np.random.Generator,
+                 jitter_sigma: float = 0.25,
+                 util_k: float = 2.0, util_cap: float = 0.9) -> AppLog:
+    """Vectorized request classification against one app's timeline.
+
+    ``times/states/accs/svcs`` are the app's serving transitions;
+    ``rates`` holds the logical request rate q_i in effect when each
+    request was generated (so spikes raise utilization → latency).
+    """
+    n = arrivals.size
+    idx = np.searchsorted(times, arrivals, side="right") - 1
+    pre = idx < 0                          # before first deploy
+    idx = np.clip(idx, 0, len(times) - 1)
+    state = states[idx]
+    served = (~pre) & (state == UP)
+    dropped = (~pre) & (state == DOWN)
+    offered = ~(pre | (state == GONE))
+
+    accuracy = np.where(served, accs[idx], np.nan)
+    svc = np.where(served, svcs[idx], np.nan)
+    util = np.clip(rates * svc * util_k, 0.0, util_cap) if n else svc
+    jitter = (np.exp(jitter_rng.normal(-0.5 * jitter_sigma ** 2,
+                                       jitter_sigma, n))
+              if n else np.empty(0))
+    with np.errstate(invalid="ignore"):
+        latency = svc / (1.0 - util) * jitter
+        degraded = served & (accuracy < full_accuracy - 1e-12)
+        slo_violated = served & (latency > slo)
+    return AppLog(app_id, arrivals, served, dropped, offered,
+                  degraded, slo_violated, accuracy, latency)
+
+
+@dataclass
+class TrafficSummary:
+    """Run-level fold of every request outcome + downtime window."""
+    n_offered: int = 0
+    n_served: int = 0
+    n_dropped: int = 0
+    n_degraded: int = 0
+    n_slo_violated: int = 0
+    availability: float = 1.0
+    goodput: float = 1.0           # accuracy-weighted, SLO-gated
+    latency_p50: float = 0.0
+    latency_p99: float = 0.0
+    # mean client_downtime over recovered windows; inf when windows
+    # exist but none recovered (permanent blackout ≠ zero downtime);
+    # 0.0 only when there were no downtime windows at all
+    client_mttr_avg: float = 0.0
+    # Σ route-outage durations; unrecovered windows are censored at the
+    # run horizon (they count as dark from crash to end of run)
+    downtime_total_s: float = 0.0
+    n_windows: int = 0
+    n_unrecovered_windows: int = 0
+    per_epoch: List[dict] = field(default_factory=list)
+    windows: List[DowntimeWindow] = field(default_factory=list)
+
+    def to_dict(self) -> Dict[str, float]:
+        return {k: getattr(self, k) for k in (
+            "n_offered", "n_served", "n_dropped", "n_degraded",
+            "n_slo_violated", "availability", "goodput", "latency_p50",
+            "latency_p99", "client_mttr_avg", "downtime_total_s",
+            "n_windows", "n_unrecovered_windows")}
+
+    def fingerprint(self) -> tuple:
+        """Deterministic digest for same-seed replay tests."""
+        def r(x):
+            return -1.0 if not math.isfinite(x) else round(float(x), 9)
+        return (self.n_offered, self.n_served, self.n_dropped,
+                self.n_degraded, self.n_slo_violated,
+                r(self.availability), r(self.goodput),
+                r(self.latency_p50), r(self.latency_p99),
+                r(self.client_mttr_avg), r(self.downtime_total_s),
+                self.n_windows, self.n_unrecovered_windows,
+                tuple(tuple(sorted(e.items())) for e in self.per_epoch))
+
+    def epoch_row(self, epoch: int) -> dict:
+        for e in self.per_epoch:
+            if e["epoch"] == epoch:
+                return e
+        return {"epoch": epoch, "n_windows": 0, "n_dropped": 0,
+                "client_mttr_avg": 0.0, "n_unrecovered": 0}
+
+
+def aggregate(logs: List[AppLog], windows: List[DowntimeWindow],
+              t_end: float) -> TrafficSummary:
+    """Fold per-app logs + downtime windows into one summary.
+
+    Also back-fills each window's ``n_dropped`` and ``t_first_served``
+    from the request arrays (the windows themselves only carry the
+    control-plane interval).
+    """
+    by_app: Dict[str, AppLog] = {l.app_id: l for l in logs}
+    for w in windows:
+        log = by_app.get(w.app_id)
+        if log is None or log.arrivals.size == 0:
+            continue
+        lo = np.searchsorted(log.arrivals, w.t_start, side="left")
+        hi = (np.searchsorted(log.arrivals, w.t_end, side="left")
+              if w.recovered else log.arrivals.size)
+        w.n_dropped = int(np.count_nonzero(log.dropped[lo:hi]))
+        if w.recovered:
+            after = np.nonzero(log.served & (log.arrivals >= w.t_end))[0]
+            if after.size:
+                w.t_first_served = float(log.arrivals[after[0]])
+
+    n_offered = sum(int(np.count_nonzero(l.offered)) for l in logs)
+    n_served = sum(int(np.count_nonzero(l.served)) for l in logs)
+    n_dropped = sum(int(np.count_nonzero(l.dropped)) for l in logs)
+    n_degraded = sum(int(np.count_nonzero(l.degraded)) for l in logs)
+    n_slo = sum(int(np.count_nonzero(l.slo_violated)) for l in logs)
+
+    good = 0.0
+    lat_all: List[np.ndarray] = []
+    for l in logs:
+        ok = l.served & ~l.slo_violated
+        if ok.any():
+            good += float(np.nansum(l.accuracy[ok]))
+        if l.served.any():
+            lat_all.append(l.latency[l.served])
+    lats = np.concatenate(lat_all) if lat_all else np.empty(0)
+
+    recovered = [w for w in windows if w.recovered]
+    client_downs = [w.client_downtime for w in recovered]
+    summary = TrafficSummary(
+        n_offered=n_offered, n_served=n_served, n_dropped=n_dropped,
+        n_degraded=n_degraded, n_slo_violated=n_slo,
+        availability=(n_served / n_offered if n_offered else 1.0),
+        goodput=(good / n_offered if n_offered else 1.0),
+        latency_p50=float(np.percentile(lats, 50)) if lats.size else 0.0,
+        latency_p99=float(np.percentile(lats, 99)) if lats.size else 0.0,
+        client_mttr_avg=(sum(client_downs) / len(client_downs)
+                         if client_downs
+                         else (math.inf if windows else 0.0)),
+        downtime_total_s=(sum(w.duration for w in recovered)
+                          + sum(t_end - w.t_start for w in windows
+                                if not w.recovered)),
+        n_windows=len(windows),
+        n_unrecovered_windows=sum(1 for w in windows if not w.recovered),
+        windows=sorted(windows, key=lambda w: (w.epoch, w.t_start,
+                                               w.app_id)))
+
+    epochs = sorted({w.epoch for w in windows})
+    for ep in epochs:
+        ws = [w for w in windows if w.epoch == ep]
+        downs = [w.client_downtime for w in ws if w.recovered]
+        summary.per_epoch.append({
+            "epoch": ep,
+            "n_windows": len(ws),
+            "n_dropped": sum(w.n_dropped for w in ws),
+            "client_mttr_avg": (sum(downs) / len(downs)
+                                if downs else math.inf),
+            "n_unrecovered": sum(1 for w in ws if not w.recovered)})
+    return summary

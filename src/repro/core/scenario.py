@@ -18,6 +18,21 @@ Named library (`SCENARIOS`): single-server, site-outage, cascade,
 rolling-with-rejoin, churn-under-failure, flaky-node. Generators
 (`cascade_failures`, `rolling_failures`, `flaky_server`) compose into
 custom scenarios.
+
+Every scenario replay is also measured at the *request* level: while the
+events above drive the control plane, the simulator's traffic plane
+(core/traffic.py + core/metrics.py) streams per-app requests through the
+epoch-versioned routing table, so each `ScenarioResult` carries
+client-observed availability, MTTR, and accuracy-weighted goodput next
+to the per-epoch controller records. `LoadSpike` is therefore no longer
+cosmetic: the multiplied rates generate real extra requests (and
+queueing-latency pressure) for the spike's duration.
+
+Determinism guarantee: the scenario RNG is seeded from (name, seed)
+independently of the workload RNG, and all request-level randomness
+derives from the simulation seed — the same (name, seed, cluster)
+yields the same event trace AND the same per-request trace; see
+`ScenarioResult.fingerprint()`.
 """
 
 from __future__ import annotations
@@ -182,6 +197,10 @@ def churn_apps(rng: random.Random, *, n: int = 3, t0: float = 0.5,
         app = Application(id=f"{prefix}{i}", family=ladder[0].family,
                           variants=ladder,
                           request_rate=rng.uniform(0.5, 2.0),
+                          # same finite SLO rule as setup-time apps
+                          # (simulation.synthetic_apps), so churned
+                          # apps are SLO-gated like everyone else
+                          latency_slo=ladder[0].compute * 4.0,
                           critical=(i % 2 == 0))
         events.append(AppArrival(t=t0 + i * spacing, app=app))
     return events

@@ -1,10 +1,30 @@
 """Discrete-event simulation platform (paper §4/§5: 100 servers, 640+
 apps, model profiles + MTTR constants taken from the testbed).
 
-Events: failure injections, detector sweeps, model-load completions.
-The simulator provides the SimClock + SimLoadExecutor the controller
-runs against; per-server load queues serialize cold loads on a cell
-(disk/PCIe contention, as on the real testbed).
+Events: failure injections, detector sweeps, model-load completions, and
+*traffic chunks*. The simulator provides the SimClock + SimLoadExecutor
+the controller runs against; per-server load queues serialize cold loads
+on a cell (disk/PCIe contention, as on the real testbed).
+
+Request-event model: client requests are not individual heap events.
+Every `traffic_chunk_s` of sim time a chunk event (interleaved with
+failure/detector/load events in the same queue) bulk-generates each live
+app's arrivals for the next window with one vectorized Poisson draw,
+reading the rates in effect at that instant — so `LoadSpike` windows and
+app churn are honored at chunk granularity while millions of requests
+per run stay cheap. Routing-table epoch bumps and crash instants are
+timestamped into per-app serving timelines (`core/traffic.py`); after
+the run, every request is classified against those timelines into
+served / dropped / degraded / SLO-violated and folded into availability,
+latency percentiles, accuracy-weighted goodput, and client-observed MTTR
+(`core/metrics.py`).
+
+Determinism guarantee: all randomness (workload synthesis, scenario
+materialization, arrival generation, latency jitter) derives from
+`SimConfig.seed` through independent named streams, and the event queue
+breaks time ties by insertion order — the same seed yields the same
+per-request trace and byte-identical summaries (`ScenarioResult
+.fingerprint()` covers both the control plane and the traffic plane).
 """
 
 from __future__ import annotations
@@ -18,9 +38,11 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.core.cluster import Cluster, make_cluster
 from repro.core.controller import FailLiteController, LoadExecutor
 from repro.core.heartbeat import FailureDetector, SimClock
+from repro.core.metrics import TrafficSummary
 from repro.core.scenario import (AppArrival, AppDeparture, LoadSpike,
                                  Scenario, ScenarioEvent, ServerFail,
                                  ServerRejoin, SiteFail, build_scenario)
+from repro.core.traffic import TrafficConfig, TrafficPlane
 from repro.core.variants import (Application, Variant, build_ladder,
                                  synthetic_family, LOAD_BW)
 
@@ -90,6 +112,10 @@ class SimConfig:
     site_independence: bool = False
     use_ilp: bool = False
     seed: int = 0
+    # request-level traffic plane: requests/s generated per unit app
+    # rate q_i (0 disables the plane) and the bulk-generation window
+    traffic_rate_scale: float = 20.0
+    traffic_chunk_s: float = 0.5
 
 
 def synthetic_apps(cfg: SimConfig, rng: random.Random,
@@ -129,6 +155,10 @@ def synthetic_apps(cfg: SimConfig, rng: random.Random,
         apps.append(Application(
             id=f"app{i}", family=ladder[0].family, variants=ladder,
             request_rate=rng.uniform(0.5, 2.0),
+            # finite SLO so the traffic plane can flag late requests:
+            # ~4x the full model's service-time proxy leaves room for
+            # jitter but not for a queueing blow-up under a LoadSpike
+            latency_slo=ladder[0].compute * 4.0,
             critical=(rng.random() < cfg.critical_frac)))
         used += need
         i += 1
@@ -142,6 +172,7 @@ class SimResult:
     accuracy_reduction: float
     n_affected: int
     records: dict
+    traffic: Optional[TrafficSummary] = None   # request-level view
 
 
 @dataclass
@@ -155,13 +186,18 @@ class ScenarioResult:
     unplaced_arrivals: int
     n_apps_final: int
     records: List[object]               # flat per-epoch RecoveryRecords
+    traffic: Optional[TrafficSummary] = None   # request-level view
 
     def fingerprint(self) -> tuple:
-        """Deterministic digest used by the determinism tests."""
-        return tuple(sorted(
+        """Deterministic digest used by the determinism tests; covers
+        both the control plane and the per-request traffic plane."""
+        base = tuple(sorted(
             (r.epoch, r.app_id, r.recovered, round(r.mttr, 9)
              if r.mttr != float("inf") else -1.0, r.variant, r.mode)
             for r in self.records))
+        if self.traffic is not None:
+            return (base, self.traffic.fingerprint())
+        return base
 
 
 class Simulation:
@@ -186,6 +222,50 @@ class Simulation:
         # per-server "other tenants" reservation, recorded at setup so a
         # rejoining (empty) server gets the same share re-blocked
         self._blockers: Dict[str, float] = {}
+        # request-level traffic plane: observes routing-table pushes and
+        # crash instants; injections are numbered so downtime windows
+        # carry the same epoch index as the controller's records
+        self._injection_seq = 0
+        self.traffic: Optional[TrafficPlane] = None
+        if cfg.traffic_rate_scale > 0:
+            self.traffic = TrafficPlane(
+                seed=cfg.seed,
+                cfg=TrafficConfig(rate_scale=cfg.traffic_rate_scale,
+                                  chunk_s=cfg.traffic_chunk_s))
+            self.controller.routing.observer = self._on_route_set
+            self.controller.routing.drop_observer = self._on_route_drop
+
+    # ------------------------------------------------------------------
+    # traffic plane hooks
+    # ------------------------------------------------------------------
+    def _on_route_set(self, app_id: str, server_id: str,
+                      variant_name: str):
+        app = self.controller.apps.get(app_id)
+        if app is None:
+            return
+        v = app.variant_by_name(variant_name)
+        self.traffic.mark_up(app_id, self.clock.now(),
+                             accuracy=v.accuracy, service_time=v.compute,
+                             full_accuracy=app.full.accuracy,
+                             slo=app.latency_slo)
+
+    def _on_route_drop(self, app_id: str):
+        self.traffic.mark_gone(app_id, self.clock.now())
+
+    def _start_traffic(self, t_end: float):
+        """Schedule the chunked bulk-generation loop up to t_end."""
+        if self.traffic is None:
+            return
+        chunk = self.traffic.cfg.chunk_s
+
+        def tick():
+            t0 = self.clock.now()
+            t1 = min(t0 + chunk, t_end)
+            self.traffic.generate_chunk(self.apps, t0, t1)
+            if t1 < t_end - 1e-12:
+                self.events.at(t1, tick)
+
+        self.events.at(self.clock.now(), tick)
 
     def setup(self):
         """Place primaries, block non-headroom capacity, plan warm backups.
@@ -227,6 +307,23 @@ class Simulation:
                 lost.extend(self.cluster.fail_server(sid))
                 self.detector.mark_failed(sid)
                 self.executor.reset_server(sid)
+            # clients see the blackout from the crash instant, well
+            # before detection; windows are tagged with the epoch index
+            # this injection will occupy (injections are handled in
+            # scheduling order, so the sequence number matches). An app
+            # goes dark iff its ROUTE pointed at the crashed server —
+            # that covers primaries and also progressive recoveries
+            # that were already serving while their selected variant
+            # was still loading (instance role "loading").
+            epoch = self._injection_seq
+            self._injection_seq += 1
+            if self.traffic is not None:
+                routes = self.controller.routing.routes
+                for inst in lost:
+                    if (inst.app_id in self.controller.apps
+                            and routes.get(inst.app_id, (None,))[0]
+                            == inst.server_id):
+                        self.traffic.mark_down(inst.app_id, t_fail, epoch)
             t_detect = (self.detector.detection_latency_bound()
                         + DETECT_SWEEP_S / 4)
             self.events.after(t_detect, lambda: self.controller
@@ -244,8 +341,10 @@ class Simulation:
         for site in (sites or []):
             failed.extend(self.cluster.sites[site])
 
+        t_end = t_fail + run_for
         self._schedule_failure(failed, t_fail)
-        self.events.run_until(t_fail + run_for)
+        self._start_traffic(t_end)
+        self.events.run_until(t_end)
 
         recs = self.controller.records
         summary = self.controller.summarize(recs)
@@ -254,7 +353,9 @@ class Simulation:
             mttr_avg=summary["mttr_avg"],
             accuracy_reduction=summary["accuracy_reduction"],
             n_affected=summary["n"],
-            records=recs)
+            records=recs,
+            traffic=(self.traffic.summarize(t_end)
+                     if self.traffic is not None else None))
 
     # ------------------------------------------------------------------
     # scenario replay
@@ -333,6 +434,7 @@ class Simulation:
                 self.events.after(reprotect_every, reprotect_tick)
 
         self.events.after(reprotect_every, reprotect_tick)
+        self._start_traffic(t_end)
         self.events.run_until(t_end)
 
         ctl = self.controller
@@ -351,7 +453,9 @@ class Simulation:
             warm_coverage=cov,
             unplaced_arrivals=stats["unplaced_arrivals"],
             n_apps_final=len(ctl.apps),
-            records=flat)
+            records=flat,
+            traffic=(self.traffic.summarize(t_end)
+                     if self.traffic is not None else None))
 
     def run_named_scenario(self, name: str, **kw) -> ScenarioResult:
         sc = build_scenario(name, self.cluster, self.apps,
@@ -368,8 +472,10 @@ def run_policy_comparison(cfg: SimConfig, fail_servers: int = 1,
                "accuracy_reduction": 0.0}
         n = 0
         for seed in seeds:
+            # only the three aggregate recovery numbers are returned, so
+            # skip the (otherwise-discarded) traffic plane
             c = SimConfig(**{**cfg.__dict__, "policy": policy,
-                             "seed": seed})
+                             "seed": seed, "traffic_rate_scale": 0.0})
             sim = Simulation(c).setup()
             if fail_sites:
                 sites = list(sim.cluster.sites)[:fail_sites]

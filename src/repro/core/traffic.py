@@ -1,0 +1,250 @@
+"""Vectorized request workload layer — the traffic half of the
+request-level traffic plane (paper §5.7: client-observed metrics).
+
+The paper's headline numbers (175.5 ms MTTR, 0.6 % accuracy loss) are
+measured at the *request* level: what clients experienced, not what the
+controller recorded. This module generates per-app request streams and
+tracks, for every application, the piecewise-constant serving timeline
+(which variant was serving when, and when the app was blacked out), so
+`core/metrics.py` can classify millions of requests after the fact.
+
+Design for scale ("millions of users"): arrivals are generated
+**per-epoch in bulk**, not per-request. A homogeneous Poisson process on
+a window [t0, t1) is sampled as one `N ~ Poisson(rate * dt)` draw plus
+`N` uniform order statistics — a single numpy call instead of `N`
+sequential exponentials — so requests never enter the discrete-event
+heap individually. The simulator schedules one *chunk* event per
+`chunk_s` of sim time; each chunk reads the apps' request rates at that
+instant (so `LoadSpike` multipliers and diurnal modulation are honored)
+and appends one numpy array per app.
+
+Serving timelines come from the control plane, not from the workload:
+`RoutingTable` epoch bumps (observed via its `observer`/`drop_observer`
+hooks) mark when a client-visible route changed, and the simulator marks
+apps down at the instant their serving primary's host crashed. The
+interval between those two is exactly the window a failure blacks out.
+
+Determinism guarantee: all draws come from one `numpy` PCG64 generator
+seeded from the simulation seed, and chunk events fire in deterministic
+event-queue order — same seed ⇒ byte-identical per-request trace,
+which `tests/test_traffic.py` asserts.
+
+`serving/workload.py` shares this layer: its `poisson_arrivals` is a
+thin wrapper over `poisson_arrival_times` for the thread-based testbed.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+# the same notify constant the controller folds into its MTTR: the two
+# metric planes must agree on it or client windows would close before
+# (or after) the controller claims recovery
+from repro.core.controller import NOTIFY_OVERHEAD_S
+from repro.core.metrics import (AppLog, DowntimeWindow, TrafficSummary,
+                                UP, DOWN, GONE, aggregate, classify_app)
+
+
+# ---------------------------------------------------------------------------
+# vectorized arrival generation (shared with serving/workload.py)
+# ---------------------------------------------------------------------------
+
+def poisson_arrival_times(rng: np.random.Generator, rate_hz: float,
+                          t0: float, t1: float) -> np.ndarray:
+    """Exact homogeneous Poisson process on [t0, t1), batched.
+
+    Draws ``N ~ Poisson(rate * (t1 - t0))`` then ``N`` uniform order
+    statistics — distributionally identical to summing exponential gaps,
+    but one vectorized call regardless of N.
+    """
+    dt = t1 - t0
+    if dt <= 0.0 or rate_hz <= 0.0:
+        return np.empty(0, np.float64)
+    n = int(rng.poisson(rate_hz * dt))
+    if n == 0:
+        return np.empty(0, np.float64)
+    return np.sort(rng.uniform(t0, t1, n))
+
+
+def diurnal_factor(t: float, *, period: float = 240.0,
+                   amplitude: float = 0.5, phase: float = 0.0) -> float:
+    """Sinusoidal day/night rate modulation, >= 0."""
+    return max(0.0, 1.0 + amplitude
+               * math.sin(2.0 * math.pi * t / period + phase))
+
+
+def diurnal_arrival_times(rng: np.random.Generator, base_rate: float,
+                          t0: float, t1: float, *, period: float = 240.0,
+                          amplitude: float = 0.5, phase: float = 0.0,
+                          bin_s: float = 1.0) -> np.ndarray:
+    """Non-homogeneous Poisson arrivals via piecewise-constant bins.
+
+    Each bin uses the diurnal rate at its midpoint; bins are generated
+    with the same batched order-statistics trick as the homogeneous case.
+    """
+    out: List[np.ndarray] = []
+    t = t0
+    while t < t1:
+        te = min(t + bin_s, t1)
+        rate = base_rate * diurnal_factor(0.5 * (t + te), period=period,
+                                          amplitude=amplitude, phase=phase)
+        out.append(poisson_arrival_times(rng, rate, t, te))
+        t = te
+    if not out:
+        return np.empty(0, np.float64)
+    return np.concatenate(out)
+
+
+# ---------------------------------------------------------------------------
+# traffic plane
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TrafficConfig:
+    """Knobs of the request plane.
+
+    ``rate_scale`` converts the paper's abstract per-app rate q_i into
+    requests/s of actual traffic (sampling density); utilization and
+    latency use the *logical* q_i, so scaling traffic up for tighter
+    confidence intervals does not change the physics.
+    """
+    rate_scale: float = 20.0      # requests/s generated per unit q_i
+    chunk_s: float = 0.5          # bulk-generation window (sim seconds)
+    util_k: float = 2.0           # q_i * service_time -> utilization
+    util_cap: float = 0.9         # clamp for the M/M/1-style factor
+    jitter_sigma: float = 0.25    # lognormal service jitter
+    diurnal_amplitude: float = 0.0  # 0 = plain Poisson
+    diurnal_period: float = 240.0
+
+
+class TrafficPlane:
+    """Per-app request streams + serving timelines for one simulation.
+
+    The simulator owns the chunk schedule and the crash hooks; the
+    controller's `RoutingTable` observers feed route transitions. At the
+    end of a run `summarize()` classifies every generated request
+    against the recorded timelines (vectorized, in `core/metrics.py`).
+    """
+
+    def __init__(self, seed: int = 0,
+                 cfg: Optional[TrafficConfig] = None):
+        self.cfg = cfg or TrafficConfig()
+        self.rng = np.random.default_rng([0x7AFF1C, seed])
+        self._jitter_seed = seed
+        # per-app chunked arrival buffers + the logical rate per chunk
+        self._arrivals: Dict[str, List[np.ndarray]] = {}
+        self._chunk_rates: Dict[str, List[Tuple[int, float]]] = {}
+        # per-app serving timeline: (t, state, accuracy, service_time)
+        self._timeline: Dict[str, List[Tuple[float, int, float, float]]] = {}
+        self._full_acc: Dict[str, float] = {}
+        self._slo: Dict[str, float] = {}
+        self.windows: List[DowntimeWindow] = []
+        self._open: Dict[str, DowntimeWindow] = {}
+
+    # -- timeline recording (control-plane hooks) ---------------------------
+    def _last_t(self, app_id: str) -> float:
+        tl = self._timeline.get(app_id)
+        return tl[-1][0] if tl else 0.0
+
+    def mark_up(self, app_id: str, t: float, *, accuracy: float,
+                service_time: float, full_accuracy: float,
+                slo: float = math.inf):
+        """Route now points at a live replica serving `accuracy`.
+
+        The first sighting registers the app (its deploy); later calls
+        are failovers or progressive upgrades. Route pushes after the
+        first are delayed by the client-notify overhead.
+        """
+        first = app_id not in self._timeline
+        if first:
+            self._timeline[app_id] = []
+            self._arrivals[app_id] = []
+            self._chunk_rates[app_id] = []
+            self._full_acc[app_id] = full_accuracy
+            self._slo[app_id] = slo
+        else:
+            t += NOTIFY_OVERHEAD_S
+        t = max(t, self._last_t(app_id))
+        self._timeline[app_id].append((t, UP, accuracy, service_time))
+        w = self._open.pop(app_id, None)
+        if w is not None:
+            w.t_end = t
+            self.windows.append(w)
+
+    def mark_down(self, app_id: str, t: float, epoch: int):
+        """The app's serving replica just died (crash instant, *before*
+        detection): requests fail from here until the next route push."""
+        tl = self._timeline.get(app_id)
+        if tl is None or tl[-1][1] != UP:
+            return                      # unknown or already down
+        t = max(t, self._last_t(app_id))
+        tl.append((t, DOWN, math.nan, math.nan))
+        self._open[app_id] = DowntimeWindow(app_id=app_id, epoch=epoch,
+                                            t_start=t)
+
+    def mark_gone(self, app_id: str, t: float):
+        """App departed: requests after this instant are not offered."""
+        tl = self._timeline.get(app_id)
+        if tl is None or tl[-1][1] == GONE:
+            return
+        t = max(t, self._last_t(app_id))
+        tl.append((t, GONE, math.nan, math.nan))
+        w = self._open.pop(app_id, None)
+        if w is not None:
+            self.windows.append(w)      # never recovered (censored)
+
+    # -- bulk generation ----------------------------------------------------
+    def generate_chunk(self, apps: Iterable, t0: float, t1: float):
+        """Generate [t0, t1) arrivals for every live app in one pass.
+
+        Reads each app's *current* request_rate, so LoadSpike windows
+        (which multiply the rate in place) are honored at chunk
+        granularity.
+        """
+        cfg = self.cfg
+        for app in apps:
+            if app.id not in self._timeline:
+                continue                # not deployed (or not routed) yet
+            q = app.request_rate
+            if cfg.diurnal_amplitude > 0.0:
+                q *= diurnal_factor(0.5 * (t0 + t1),
+                                    period=cfg.diurnal_period,
+                                    amplitude=cfg.diurnal_amplitude)
+            arr = poisson_arrival_times(self.rng, q * cfg.rate_scale,
+                                        t0, t1)
+            if arr.size:
+                self._arrivals[app.id].append(arr)
+                self._chunk_rates[app.id].append((arr.size, q))
+
+    # -- aggregation --------------------------------------------------------
+    def summarize(self, t_end: float) -> TrafficSummary:
+        """Classify every request against its app's timeline and fold
+        the outcomes into a `TrafficSummary` (see core/metrics.py)."""
+        logs: List[AppLog] = []
+        windows = list(self.windows) + list(self._open.values())
+        for idx, app_id in enumerate(sorted(self._timeline)):
+            chunks = self._arrivals[app_id]
+            arrivals = (np.concatenate(chunks) if chunks
+                        else np.empty(0, np.float64))
+            rates = (np.concatenate(
+                [np.full(n, q) for n, q in self._chunk_rates[app_id]])
+                if chunks else np.empty(0, np.float64))
+            tl = self._timeline[app_id]
+            times = np.array([e[0] for e in tl])
+            states = np.array([e[1] for e in tl], np.int8)
+            accs = np.array([e[2] for e in tl])
+            svcs = np.array([e[3] for e in tl])
+            jitter_rng = np.random.default_rng(
+                [0x1A7E, self._jitter_seed, idx])
+            logs.append(classify_app(
+                app_id, arrivals, rates, times, states, accs, svcs,
+                full_accuracy=self._full_acc[app_id],
+                slo=self._slo[app_id],
+                jitter_rng=jitter_rng,
+                jitter_sigma=self.cfg.jitter_sigma,
+                util_k=self.cfg.util_k, util_cap=self.cfg.util_cap))
+        return aggregate(logs, windows, t_end)

@@ -1,4 +1,11 @@
-"""Request workload generators for the serving testbed/benchmarks."""
+"""Request workload generators for the serving testbed/benchmarks.
+
+Arrival generation is shared with the simulator's request-level traffic
+plane (`repro.core.traffic`): the same batched order-statistics sampler
+produces both the testbed's wall-clock schedules and the simulator's
+bulk per-chunk streams, so testbed and simulation runs draw from the
+same arrival-process family (Poisson, optionally diurnally modulated).
+"""
 
 from __future__ import annotations
 
@@ -9,6 +16,7 @@ from typing import Iterator, List
 
 import numpy as np
 
+from repro.core.traffic import diurnal_arrival_times, poisson_arrival_times
 from repro.serving.engine import Request
 
 
@@ -25,12 +33,27 @@ def make_request(rng: random.Random, rid: str, vocab: int,
         submitted_at=time.monotonic())
 
 
+def _np_rng(rng: random.Random) -> np.random.Generator:
+    """Derive a numpy generator from the caller's seeded random.Random
+    so existing call sites keep their (seed-driven) determinism."""
+    return np.random.default_rng(rng.getrandbits(64))
+
+
 def poisson_arrivals(rng: random.Random, rate_hz: float,
                      duration_s: float) -> List[float]:
-    """Arrival offsets (s) of a Poisson process over [0, duration)."""
-    t, out = 0.0, []
-    while True:
-        t += rng.expovariate(rate_hz)
-        if t >= duration_s:
-            return out
-        out.append(t)
+    """Arrival offsets (s) of a Poisson process over [0, duration).
+
+    Delegates to the vectorized shared layer (one batched draw instead
+    of N sequential exponentials).
+    """
+    return poisson_arrival_times(_np_rng(rng), rate_hz,
+                                 0.0, duration_s).tolist()
+
+
+def diurnal_arrivals(rng: random.Random, base_rate_hz: float,
+                     duration_s: float, *, period_s: float = 240.0,
+                     amplitude: float = 0.5) -> List[float]:
+    """Arrival offsets of a diurnally-modulated Poisson process."""
+    return diurnal_arrival_times(_np_rng(rng), base_rate_hz,
+                                 0.0, duration_s, period=period_s,
+                                 amplitude=amplitude).tolist()

@@ -1,0 +1,43 @@
+"""Docs stay healthy: intra-repo markdown links resolve and the
+runnable snippets in docs/ + README execute (same machinery as the CI
+docs job, tools/check_docs.py)."""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_docs_exist():
+    assert (ROOT / "docs" / "ARCHITECTURE.md").is_file()
+    assert (ROOT / "docs" / "SCENARIOS.md").is_file()
+
+
+def test_intra_repo_markdown_links_resolve():
+    paths = sorted({p for g in check_docs.LINK_FILES_GLOB
+                    for p in ROOT.glob(g) if p.is_file()})
+    assert paths
+    errors = check_docs.check_links(paths)
+    assert errors == []
+
+
+def test_docs_reference_the_traffic_plane():
+    arch = (ROOT / "docs" / "ARCHITECTURE.md").read_text()
+    scen = (ROOT / "docs" / "SCENARIOS.md").read_text()
+    for needle in ("traffic.py", "metrics.py", "client-observed"):
+        assert needle in arch
+    for needle in ("client-observed MTTR", "goodput", "LoadSpike"):
+        assert needle in scen
+
+
+def test_doc_snippets_execute():
+    paths = [ROOT / f for f in check_docs.SNIPPET_FILES]
+    snippets = [s for p in paths for s in check_docs.iter_snippets(p)]
+    assert len(snippets) >= 5, "docs lost their runnable snippets"
+    errors = check_docs.run_snippets(paths)
+    assert errors == []

@@ -1,0 +1,257 @@
+"""Request-level traffic plane: vectorized arrival generation, per-seed
+determinism of the per-request trace, downtime-window accounting,
+client-observed vs controller MTTR, LoadSpike request pressure, and
+degraded/goodput bookkeeping."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.scenario import (LoadSpike, Scenario, ServerFail,
+                                 ServerRejoin)
+from repro.core.simulation import SimConfig, Simulation
+from repro.core.traffic import (TrafficConfig, TrafficPlane,
+                                diurnal_arrival_times, diurnal_factor,
+                                poisson_arrival_times)
+from repro.core.variants import Application, synthetic_family
+
+
+def _sim(**kw):
+    base = dict(n_sites=4, servers_per_site=5, headroom=0.2,
+                policy="faillite", seed=0)
+    base.update(kw)
+    return Simulation(SimConfig(**base)).setup()
+
+
+# ---------------------------------------------------------------------------
+# vectorized generators
+# ---------------------------------------------------------------------------
+
+def test_poisson_arrival_times_statistics_and_bounds():
+    rng = np.random.default_rng(0)
+    arr = poisson_arrival_times(rng, 200.0, 2.0, 12.0)
+    assert arr.size > 0
+    assert np.all(arr >= 2.0) and np.all(arr < 12.0)
+    assert np.all(np.diff(arr) >= 0)          # sorted
+    # count concentrates around rate * duration = 2000
+    assert 1700 < arr.size < 2300
+    assert poisson_arrival_times(rng, 0.0, 0.0, 10.0).size == 0
+    assert poisson_arrival_times(rng, 5.0, 3.0, 3.0).size == 0
+
+
+def test_diurnal_arrivals_modulate_rate():
+    rng = np.random.default_rng(1)
+    period = 100.0
+    # peak half vs trough half of one period, amplitude 1
+    peak = diurnal_arrival_times(rng, 100.0, 0.0, 50.0, period=period,
+                                 amplitude=1.0)
+    trough = diurnal_arrival_times(rng, 100.0, 50.0, 100.0, period=period,
+                                   amplitude=1.0)
+    assert peak.size > 2 * trough.size
+    assert diurnal_factor(75.0, period=period, amplitude=1.0) < 0.1
+
+
+def test_serving_workload_shares_vectorized_layer():
+    import random
+    from repro.serving.workload import poisson_arrivals
+    rng = random.Random(0)
+    out = poisson_arrivals(rng, 50.0, 10.0)
+    assert isinstance(out, list)
+    assert all(0.0 <= t < 10.0 for t in out)
+    assert out == sorted(out)
+    assert 350 < len(out) < 650
+    # same seed => same schedule
+    assert poisson_arrivals(random.Random(7), 5.0, 5.0) \
+        == poisson_arrivals(random.Random(7), 5.0, 5.0)
+
+
+# ---------------------------------------------------------------------------
+# per-seed determinism of the request-level numbers (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["single-server", "cascade",
+                                  "churn-under-failure"])
+def test_request_level_numbers_identical_across_runs(name):
+    a = _sim(seed=5).run_named_scenario(name)
+    b = _sim(seed=5).run_named_scenario(name)
+    assert a.traffic is not None and b.traffic is not None
+    assert a.traffic.fingerprint() == b.traffic.fingerprint()
+    assert a.traffic.to_dict() == b.traffic.to_dict()
+    assert a.fingerprint() == b.fingerprint()
+
+
+def test_different_seed_changes_request_trace():
+    a = _sim(seed=0).run_named_scenario("single-server")
+    b = _sim(seed=1).run_named_scenario("single-server")
+    assert a.traffic.fingerprint() != b.traffic.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# downtime windows + client-observed MTTR
+# ---------------------------------------------------------------------------
+
+def test_windows_open_per_affected_app_and_close_on_recovery():
+    sim = _sim()
+    victim = sim.controller.primaries[sim.apps[0].id]
+    n_primaries = sum(1 for i in
+                      sim.cluster.servers[victim].instances.values()
+                      if i.role == "primary" and i.app_id != "_reserved")
+    res = sim.run_scenario(Scenario(
+        name="one", horizon=30.0,
+        events=[ServerFail(t=1.0, server=victim)]))
+    t = res.traffic
+    assert t.n_windows == n_primaries
+    assert t.n_unrecovered_windows == 0
+    for w in t.windows:
+        assert w.epoch == 0
+        assert w.t_start == pytest.approx(1.0)
+        assert w.recovered and w.duration > 0
+        assert w.client_downtime >= w.duration - 1e-9
+
+
+def test_client_mttr_upper_bounds_controller_mttr():
+    """Clients pay crash->detection lead-in + notify + arrival
+    discretization on top of what the controller records."""
+    sim = _sim(traffic_rate_scale=80.0)
+    victim = sim.controller.primaries[sim.apps[0].id]
+    res = sim.inject_failure(servers=[victim])
+    assert res.traffic.n_windows > 0
+    assert res.traffic.client_mttr_avg > res.mttr_avg
+    # ...but not by much more than notify + one inter-arrival gap
+    assert res.traffic.client_mttr_avg < res.mttr_avg + 0.5
+
+
+def test_unrecovered_window_stays_open():
+    """An app that never recovers keeps a censored (inf) window, and its
+    requests keep dropping until the end of the run."""
+    ladder = synthetic_family("big", 6.0e9, n_variants=2, spread=1.2)
+    app = Application(id="app0", family="big", variants=ladder,
+                      request_rate=2.0)
+    cfg = SimConfig(n_sites=1, servers_per_site=2, headroom=0.1,
+                    policy="faillite")
+    sim = Simulation(cfg, apps=[app]).setup()
+    victim = sim.controller.primaries["app0"]
+    res = sim.inject_failure(servers=[victim], run_for=10.0)
+    assert not res.records["app0"].recovered
+    t = res.traffic
+    assert t.n_unrecovered_windows == 1
+    assert t.availability < 1.0
+    w = t.windows[0]
+    assert not w.recovered and math.isinf(w.client_downtime)
+    assert w.n_dropped > 0
+    # a permanent blackout is the worst outcome, not zero downtime
+    assert math.isinf(t.client_mttr_avg)
+    # unrecovered windows are censored at the horizon, not dropped
+    assert t.downtime_total_s > 5.0
+
+
+# ---------------------------------------------------------------------------
+# LoadSpike / degraded / goodput
+# ---------------------------------------------------------------------------
+
+def test_load_spike_generates_extra_requests():
+    base = Scenario(name="calm", horizon=20.0, events=[])
+    spiky = Scenario(name="spiky", horizon=20.0, events=[
+        LoadSpike(t=2.0, factor=4.0, duration=10.0)])
+    r_base = _sim().run_scenario(base)
+    r_spiky = _sim().run_scenario(spiky)
+    assert r_spiky.traffic.n_offered > 1.5 * r_base.traffic.n_offered
+    # queueing pressure from the spike shows up in tail latency
+    assert r_spiky.traffic.latency_p99 > r_base.traffic.latency_p99
+    assert r_spiky.traffic.n_slo_violated > r_base.traffic.n_slo_violated
+
+
+def test_progressive_failover_serves_degraded_requests():
+    """Between small-variant-up and full-variant-upgrade the traffic is
+    served degraded; goodput accounts for the accuracy loss."""
+    ladder = synthetic_family("fam", 4.0e9, n_variants=4, spread=6.0)
+    app = Application(id="app0", family="fam", variants=ladder,
+                      request_rate=2.0, critical=False)
+    cfg = SimConfig(n_sites=2, servers_per_site=2, headroom=0.45,
+                    policy="faillite", traffic_rate_scale=100.0)
+    sim = Simulation(cfg, apps=[app]).setup()
+    victim = sim.controller.primaries["app0"]
+    res = sim.inject_failure(servers=[victim])
+    assert res.records["app0"].mode == "cold-progressive"
+    t = res.traffic
+    assert t.n_degraded > 0
+    assert t.goodput < t.availability       # degradation costs goodput
+
+
+def test_second_crash_during_progressive_upgrade_opens_window():
+    """An app serving from a 'loading'-role instance (small variant up,
+    selected variant still loading) must black out when that server
+    crashes: the route pointed there, even though no 'primary'-role
+    instance did."""
+    def build():
+        ladder = synthetic_family("fam", 4.0e9, n_variants=4, spread=6.0)
+        app = Application(id="app0", family="fam", variants=ladder,
+                          request_rate=2.0, critical=False)
+        cfg = SimConfig(n_sites=2, servers_per_site=2, headroom=0.45,
+                        policy="faillite", traffic_rate_scale=100.0)
+        return Simulation(cfg, apps=[app]).setup()
+
+    # throwaway run to learn (deterministically) where app0 recovers
+    probe = build()
+    victim = probe.controller.primaries["app0"]
+    probe.inject_failure(servers=[victim])
+    target = probe.controller.primaries["app0"]
+    assert target != victim
+
+    sim = build()
+    assert sim.controller.primaries["app0"] == victim
+    res = sim.run_scenario(Scenario(name="double", horizon=30.0, events=[
+        ServerFail(t=1.0, server=victim),
+        # small variant is serving from ~1.2s; the full variant is still
+        # loading (role stays "loading" until the hot-swap completes)
+        ServerFail(t=1.35, server=target),
+    ]))
+    t = res.traffic
+    assert t.n_windows == 2
+    assert {w.epoch for w in t.windows} == {0, 1}
+    assert all(w.recovered for w in t.windows)
+
+
+def test_departed_app_requests_not_offered():
+    """Traffic generated for an app after its departure is excluded from
+    the offered count instead of polluting availability."""
+    sim = _sim()
+    aid = sim.apps[0].id
+    from repro.core.scenario import AppDeparture
+    res = sim.run_scenario(Scenario(
+        name="bye", horizon=20.0,
+        events=[AppDeparture(t=5.0, app_id=aid)]))
+    t = res.traffic
+    assert t.n_offered > 0
+    assert t.availability == pytest.approx(1.0)
+    assert t.n_dropped == 0
+
+
+# ---------------------------------------------------------------------------
+# scenario-suite integration: every named scenario reports the plane
+# ---------------------------------------------------------------------------
+
+def test_every_named_scenario_reports_request_metrics():
+    from repro.core.scenario import SCENARIOS
+    from repro.core.simulation import run_scenario_suite
+    cfg = SimConfig(n_sites=3, servers_per_site=3, headroom=0.25, seed=0)
+    suite = run_scenario_suite(cfg, names=sorted(SCENARIOS),
+                               policies=("faillite",))
+    for name, by_policy in suite.items():
+        t = by_policy["faillite"].traffic
+        assert t is not None, name
+        assert t.n_offered > 0
+        assert 0.0 <= t.availability <= 1.0
+        assert 0.0 <= t.goodput <= t.availability + 1e-9
+        for row in t.per_epoch:
+            assert set(row) == {"epoch", "n_windows", "n_dropped",
+                                "client_mttr_avg", "n_unrecovered"}
+
+
+def test_traffic_plane_disabled_by_zero_scale():
+    sim = _sim(traffic_rate_scale=0.0)
+    assert sim.traffic is None
+    res = sim.run_named_scenario("single-server")
+    assert res.traffic is None
+    assert isinstance(res.fingerprint(), tuple)

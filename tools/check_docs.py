@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""Docs health check: smoke-execute ```python fences and verify
+intra-repo markdown links.
+
+Used by the CI docs job and by tests/test_docs.py:
+
+    PYTHONPATH=src python tools/check_docs.py            # both checks
+    PYTHONPATH=src python tools/check_docs.py --links    # links only
+
+Every fenced ```python block in README.md and docs/*.md is executed in
+its own namespace (with src/ on sys.path) unless the fence is preceded
+by an HTML comment containing `no-run` within the two lines above it.
+Keep snippets small-scale (tiny clusters) — they run on every CI push.
+
+Link checking covers relative links `[text](path)` in all tracked
+markdown files: the target (ignoring any #fragment) must exist relative
+to the file. External schemes (http/https/mailto) are skipped.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+ROOT = Path(__file__).resolve().parents[1]
+
+SNIPPET_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/SCENARIOS.md"]
+LINK_FILES_GLOB = ["*.md", "docs/*.md"]
+
+FENCE_RE = re.compile(r"^```python\s*$")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def iter_snippets(path: Path) -> List[Tuple[int, str]]:
+    """Yield (start_line, source) for runnable ```python fences."""
+    lines = path.read_text().splitlines()
+    out: List[Tuple[int, str]] = []
+    i = 0
+    while i < len(lines):
+        if FENCE_RE.match(lines[i]):
+            context = " ".join(lines[max(0, i - 2):i])
+            skip = "no-run" in context
+            block: List[str] = []
+            j = i + 1
+            while j < len(lines) and not lines[j].startswith("```"):
+                block.append(lines[j])
+                j += 1
+            if not skip:
+                out.append((i + 1, "\n".join(block)))
+            i = j
+        i += 1
+    return out
+
+
+def run_snippets(paths: List[Path]) -> List[str]:
+    errors: List[str] = []
+    sys.path.insert(0, str(ROOT / "src"))
+    for path in paths:
+        for lineno, src in iter_snippets(path):
+            label = f"{path.relative_to(ROOT)}:{lineno}"
+            try:
+                code = compile(src, label, "exec")
+                exec(code, {"__name__": "__docsnippet__"})
+            except Exception as e:                     # noqa: BLE001
+                errors.append(f"{label}: {type(e).__name__}: {e}")
+            else:
+                print(f"ok   snippet {label}")
+    return errors
+
+
+def check_links(paths: List[Path]) -> List[str]:
+    errors: List[str] = []
+    for path in paths:
+        file_errors: List[str] = []
+        for m in LINK_RE.finditer(path.read_text()):
+            target = m.group(1)
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # scheme
+                continue
+            if target.startswith("#"):                     # same-page
+                continue
+            rel = target.split("#", 1)[0]
+            resolved = (path.parent / rel).resolve()
+            if not resolved.exists():
+                file_errors.append(f"{path.relative_to(ROOT)}: broken "
+                                   f"link -> {target}")
+        status = "ok  " if not file_errors else "FAIL"
+        print(f"{status} links   {path.relative_to(ROOT)}")
+        errors += file_errors
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--links", action="store_true",
+                    help="only check markdown links")
+    ap.add_argument("--snippets", action="store_true",
+                    help="only execute doc snippets")
+    args = ap.parse_args()
+    do_links = args.links or not args.snippets
+    do_snippets = args.snippets or not args.links
+
+    link_paths = sorted({p for g in LINK_FILES_GLOB
+                         for p in ROOT.glob(g) if p.is_file()})
+    snippet_paths = [ROOT / f for f in SNIPPET_FILES if (ROOT / f).exists()]
+
+    errors: List[str] = []
+    if do_links:
+        errors += check_links(link_paths)
+    if do_snippets:
+        errors += run_snippets(snippet_paths)
+    if errors:
+        print("\nFAILED:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("\ndocs check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
