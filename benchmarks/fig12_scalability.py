@@ -1,51 +1,97 @@
-"""Fig. 12 — heuristic scalability: wall time of Algorithm 1 vs number of
+"""Fig. 12 — planner scalability: wall time of Algorithm 1 vs number of
 applications / servers / variants (paper fixes 500 servers, 1000 apps,
-4 variants and sweeps each)."""
+4 variants and sweeps each), now per registered policy.
+
+The sweep runs every realtime planner from the registry (vectorized
+`greedy`, the `legacy-greedy` loop oracle, `load-aware`) on identical
+instances, and a second stage reports end-to-end recovery: MTTR and
+cumulative planner wall time for a single-server failure at fleet
+scale (>= 1000 apps / 100 servers in quick mode, beyond in --full)."""
 
 from __future__ import annotations
 
 import random
 import time
 
+POLICIES = ("greedy", "legacy-greedy", "load-aware")
 
-def run(quick: bool = True):
+
+def _instance(n_apps, n_servers, n_variants):
     from repro.core.cluster import make_cluster
-    from repro.core.heuristic import faillite_heuristic
     from repro.core.variants import Application, synthetic_family
 
-    def bench(n_apps, n_servers, n_variants):
-        rng = random.Random(0)
-        cluster = make_cluster(max(1, n_servers // 10), 10, mem=64e9)
-        apps = []
-        for i in range(n_apps):
-            lad = synthetic_family(f"f{i}", rng.uniform(1e9, 4e9),
-                                   n_variants=n_variants)
-            apps.append(Application(id=f"a{i}", family=f"f{i}",
-                                    variants=lad,
-                                    request_rate=rng.uniform(0.5, 2)))
-        t0 = time.perf_counter()
-        res = faillite_heuristic(apps, cluster)
-        dt = time.perf_counter() - t0
-        return dt, len(res.assignment)
+    rng = random.Random(0)
+    cluster = make_cluster(max(1, n_servers // 10), 10, mem=64e9)
+    apps = []
+    for i in range(n_apps):
+        lad = synthetic_family(f"f{i}", rng.uniform(1e9, 4e9),
+                               n_variants=n_variants)
+        apps.append(Application(id=f"a{i}", family=f"f{i}",
+                                variants=lad,
+                                request_rate=rng.uniform(0.5, 2)))
+    return apps, cluster
 
+
+def _bench(policy, n_apps, n_servers, n_variants):
+    from repro.core.planner import PlanRequest, get_planner
+
+    apps, cluster = _instance(n_apps, n_servers, n_variants)
+    t0 = time.perf_counter()
+    res = get_planner(policy).plan(PlanRequest(apps=apps, cluster=cluster))
+    dt = time.perf_counter() - t0
+    return dt, len(res.assignment)
+
+
+def _mttr_point(n_servers, server_mem, planner, seed=0):
+    """End-to-end: one server failure at fleet scale; returns
+    (#apps, planner wall time inside the controller, controller MTTR)."""
+    from repro.core.simulation import SimConfig, Simulation
+
+    cfg = SimConfig(n_sites=max(1, n_servers // 10), servers_per_site=10,
+                    server_mem=server_mem, planner=planner, seed=seed,
+                    traffic_rate_scale=0.0)
+    sim = Simulation(cfg).setup()
+    victim = max(sim.cluster.alive_servers(),
+                 key=lambda s: sum(1 for i in s.instances.values()
+                                   if i.role == "primary"))
+    res = sim.inject_failure(servers=[victim.id], run_for=30.0)
+    return (len(sim.controller.apps), sim.controller.plan_wall_s,
+            res.mttr_avg)
+
+
+def run(quick: bool = True):
     apps_sweep = [100, 1000] if quick else [100, 500, 1000, 2000, 3000]
-    srv_sweep = [100, 500] if quick else [100, 250, 500, 750, 1000]
-    var_sweep = [2, 4] if quick else [2, 4, 6, 8]
+    srv_sweep = [50, 100] if quick else [100, 250, 500, 750, 1000]
+    var_sweep = [4] if quick else [2, 4, 6, 8]
 
-    print("# fig12: sweep,value,wall_s,placed")
+    print("# fig12: sweep,value,policy,wall_s,placed")
     rows = []
     for n in apps_sweep:
-        dt, placed = bench(n, 500, 4)
-        rows.append(("apps", n, dt, placed))
-        print(f"fig12,apps,{n},{dt:.3f},{placed}")
+        for pol in POLICIES:
+            dt, placed = _bench(pol, n, 100, 4)
+            rows.append(("apps", n, pol, dt, placed))
+            print(f"fig12,apps,{n},{pol},{dt:.4f},{placed}")
     for n in srv_sweep:
-        dt, placed = bench(1000, n, 4)
-        rows.append(("servers", n, dt, placed))
-        print(f"fig12,servers,{n},{dt:.3f},{placed}")
+        for pol in POLICIES:
+            dt, placed = _bench(pol, 1000, n, 4)
+            rows.append(("servers", n, pol, dt, placed))
+            print(f"fig12,servers,{n},{pol},{dt:.4f},{placed}")
     for n in var_sweep:
-        dt, placed = bench(1000, 500, n)
-        rows.append(("variants", n, dt, placed))
-        print(f"fig12,variants,{n},{dt:.3f},{placed}")
+        for pol in POLICIES:
+            dt, placed = _bench(pol, 1000, 100, n)
+            rows.append(("variants", n, pol, dt, placed))
+            print(f"fig12,variants,{n},{pol},{dt:.4f},{placed}")
+
+    # planner wall time alongside MTTR, end-to-end at fleet scale:
+    # 100 servers sized so ~1000 primaries place (~2.3 GB avg full model)
+    print("# fig12-mttr: n_servers,policy,n_apps,planner_wall_s,mttr_s")
+    mttr_points = [(100, 48e9)] if quick else [(100, 48e9), (200, 48e9)]
+    for n_servers, mem in mttr_points:
+        for pol in ("greedy", "load-aware"):
+            n_apps, wall, mttr = _mttr_point(n_servers, mem, pol)
+            rows.append(("mttr", n_servers, pol, wall, n_apps, mttr))
+            print(f"fig12-mttr,{n_servers},{pol},{n_apps},"
+                  f"{wall:.4f},{mttr:.4f}")
     return rows
 
 

@@ -62,6 +62,24 @@ class Cluster:
         for s in servers:
             self.sites.setdefault(s.site, []).append(s.id)
         self._counter = itertools.count()
+        # change observers, fired with the touched server id on every
+        # capacity-relevant mutation (place/remove/fail/revive) — the
+        # planner's array state subscribes here for incremental sync
+        self._observers: List = []
+
+    # -- change notification -------------------------------------------------
+    def subscribe(self, fn) -> None:
+        """Register `fn(server_id)` to run after every mutation of that
+        server's instances or liveness."""
+        self._observers.append(fn)
+
+    def unsubscribe(self, fn) -> None:
+        if fn in self._observers:
+            self._observers.remove(fn)
+
+    def _notify(self, server_id: str) -> None:
+        for fn in tuple(self._observers):
+            fn(server_id)
 
     # -- queries ------------------------------------------------------------
     def alive_servers(self) -> List[Server]:
@@ -100,19 +118,24 @@ class Cluster:
                 f"demand={inst.demand}")
         key = f"{app_id}@{variant.name}#{next(self._counter)}"
         srv.instances[key] = inst
+        self._notify(server_id)
         return key
 
     def remove(self, key: str, server_id: str):
-        self.servers[server_id].instances.pop(key, None)
+        if self.servers[server_id].instances.pop(key, None) is not None:
+            self._notify(server_id)
 
     def remove_app(self, app_id: str) -> List[str]:
         """Drop every instance of an app (departure); returns the keys."""
         removed = []
         for srv in self.servers.values():
-            for key in [k for k, inst in srv.instances.items()
-                        if inst.app_id == app_id]:
+            keys = [k for k, inst in srv.instances.items()
+                    if inst.app_id == app_id]
+            for key in keys:
                 del srv.instances[key]
                 removed.append(key)
+            if keys:
+                self._notify(srv.id)
         return removed
 
     # -- failures -----------------------------------------------------------
@@ -122,6 +145,7 @@ class Cluster:
         if not srv.alive:
             return []
         srv.alive = False
+        self._notify(server_id)
         return list(srv.instances.values())
 
     def fail_site(self, site: str) -> List[Instance]:
@@ -136,6 +160,7 @@ class Cluster:
         srv = self.servers[server_id]
         srv.instances.clear()
         srv.alive = True
+        self._notify(server_id)
         return srv
 
     # backwards-compatible alias

@@ -22,7 +22,7 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 from repro.core.cluster import Cluster, Instance, RESOURCES
 from repro.core.datastore import DataStore
 from repro.core.heartbeat import Clock, FailureDetector
-from repro.core.heuristic import faillite_heuristic, worst_fit, _FreeView
+from repro.core.planner import PlanRequest, PlannerState, get_planner
 from repro.core.variants import Application, Variant
 
 POLICIES = ("faillite", "full-warm", "full-cold", "full-warm-k")
@@ -98,6 +98,7 @@ class FailLiteController:
                  alpha: float = 0.1,
                  site_independence: bool = False,
                  use_ilp: bool = False,
+                 planner: Optional[str] = None,
                  detector: Optional[FailureDetector] = None,
                  datastore: Optional[DataStore] = None):
         assert policy in POLICIES, policy
@@ -108,6 +109,18 @@ class FailLiteController:
         self.alpha = alpha if policy == "faillite" else 0.0
         self.site_independence = site_independence
         self.use_ilp = use_ilp
+        # planner selection by registry name (docs/PLANNER.md); the
+        # legacy `use_ilp` flag maps onto the "ilp" planner
+        self.planner = get_planner(planner or ("ilp" if use_ilp
+                                               else "greedy"))
+        # the failover hot path (§3.3, MTTR-critical) always runs a
+        # realtime planner; non-realtime ones (ilp) plan proactively only
+        self.fast_planner = (self.planner if self.planner.realtime
+                             else get_planner("greedy"))
+        # persistent array-backed capacity view; Cluster notifies it of
+        # per-server deltas, so planning never rebuilds a view per call
+        self.state = PlannerState(cluster)
+        self.plan_wall_s = 0.0       # cumulative planner time (all calls)
         self.detector = detector or FailureDetector(clock)
         self.ds = datastore or DataStore()
         self.apps: Dict[str, Application] = {}
@@ -143,8 +156,7 @@ class FailLiteController:
                        server_id: Optional[str] = None) -> str:
         """Worst-fit primary placement of the full model (paper §5.1)."""
         if server_id is None:
-            view = _FreeView(self.cluster.alive_servers())
-            server_id = worst_fit(view, app.full.demand, set())
+            server_id = self.state.worst_fit(app.full.demand)
             if server_id is None:
                 raise ValueError(f"no capacity for primary of {app.id}")
         self.cluster.place(app.id, app.full, server_id, "primary")
@@ -167,21 +179,14 @@ class FailLiteController:
         return []                  # full-cold
 
     def plan_warm_backups(self) -> Dict[str, Tuple[Variant, str]]:
-        """Proactive step: ILP (or heuristic) for FailLite; greedy
-        full-size placement for the baselines."""
+        """Proactive step: the configured planner (ILP or a greedy
+        policy) for FailLite; full-size placement for the baselines."""
         cands = self._warm_candidates()
         if not cands:
             return {}
         if self.policy == "faillite":
-            if self.use_ilp:
-                from repro.core.placement import solve_warm_placement
-                res = solve_warm_placement(
-                    cands, self.cluster, self.primaries, alpha=self.alpha,
-                    site_independence=self.site_independence)
-                assignment = res.assignment
-            else:
-                assignment = self._heuristic_assign(cands,
-                                                    alpha=self.alpha)
+            assignment = self._plan(cands, alpha=self.alpha,
+                                    proactive=True)
         else:
             assignment = self._fullsize_assign(cands)
 
@@ -192,28 +197,30 @@ class FailLiteController:
                                            "variant": variant.name})
         return assignment
 
-    def _heuristic_assign(self, cands, *, alpha=0.0, servers_view=None):
-        excl = {a.id: {self.primaries.get(a.id)} for a in cands}
-        site_excl = {}
-        if self.site_independence:
-            for a in cands:
-                p = self.primaries.get(a.id)
-                site_excl[a.id] = ({self.cluster.servers[p].site}
-                                   if p else set())
-        res = faillite_heuristic(cands, self.cluster, exclude=excl,
-                                 site_exclude=site_excl, alpha=alpha)
+    def _plan(self, cands, *, alpha=0.0, proactive=False):
+        """One planner round over `cands` against the persistent state.
+
+        Proactive rounds (warm-backup planning) may use a non-realtime
+        planner; the failover hot path always gets a realtime one."""
+        planner = self.planner if proactive else self.fast_planner
+        res = planner.plan(PlanRequest(
+            apps=cands, cluster=self.cluster, state=self.state,
+            primaries=self.primaries, alpha=alpha,
+            site_independence=self.site_independence,
+            now=self.clock.now()))
+        self.plan_wall_s += getattr(res, "wall_s", 0.0)
         return res.assignment
 
     def _fullsize_assign(self, cands):
         """Baselines: only the full-size variant, greedy worst-fit."""
-        view = _FreeView(self.cluster.alive_servers())
+        view = self.state.scratch()
         out = {}
         for app in cands:
-            excl = {self.primaries.get(app.id)}
+            excl = {self.primaries.get(app.id)} - {None}
             if self.site_independence and self.primaries.get(app.id):
                 p_site = self.cluster.servers[self.primaries[app.id]].site
                 excl |= set(self.cluster.sites.get(p_site, ()))
-            sid = worst_fit(view, app.full.demand, excl)
+            sid = view.worst_fit(app.full.demand, excl)
             if sid is not None:
                 view.take(sid, app.full.demand)
                 out[app.id] = (app.full, sid)
@@ -322,7 +329,7 @@ class FailLiteController:
     def _progressive(self, apps: List[Application], t_fail: float,
                      t_detect: float) -> Dict[str, RecoveryRecord]:
         if self.policy == "faillite":
-            assignment = self._heuristic_assign(apps, alpha=0.0)
+            assignment = self._plan(apps)
             keys = self._commit(assignment)
             missing = [a for a in apps if a.id not in keys]
             if missing:
@@ -374,12 +381,12 @@ class FailLiteController:
                                                "reason": "reclaimed"})
             i += batch
             batch *= 2          # exponential batching keeps this O(log n)
-            assignment = self._heuristic_assign(missing, alpha=0.0)
+            assignment = self._plan(missing)
             if len(assignment) == len(missing):
                 return assignment
         # one final, internally-consistent assignment (placements from
         # intermediate probes are never committed, so no double-booking)
-        return self._heuristic_assign(missing, alpha=0.0)
+        return self._plan(missing)
 
     def _progressive_load(self, app: Application, v_sel: Variant,
                           sid: str, t_fail: float, t_detect: float,
@@ -504,7 +511,7 @@ class FailLiteController:
             return 0
         apps = [self.apps[aid] for aid, _, _ in down]
         if self.policy == "faillite":
-            assignment = self._heuristic_assign(apps, alpha=0.0)
+            assignment = self._plan(apps)
         else:
             assignment = self._fullsize_assign(apps)
         keys = self._commit(assignment)
@@ -537,7 +544,7 @@ class FailLiteController:
                    and self.cluster.servers[self.primaries[a.id]].alive]
         if not missing:
             return {}
-        assignment = (self._heuristic_assign(missing, alpha=self.alpha)
+        assignment = (self._plan(missing, alpha=self.alpha)
                       if self.policy == "faillite"
                       else self._fullsize_assign(missing))
         placed = {}

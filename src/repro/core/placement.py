@@ -1,189 +1,9 @@
-"""Warm-backup model selection & placement — the paper's ILP (Eq. 1-7).
+"""Compatibility shim — the warm-backup ILP (Eq. 1-7) now lives in
+`core/planner/ilp.py`, with sparse constraint assembly built from the
+planner's array state. See docs/PLANNER.md."""
 
-max  Σ_{i∈K} Σ_j Σ_k  a_ij · q_i · x_ijk
-s.t. per-server capacity (2), α cold-reserve (3), primary anti-affinity
-(4, optionally extended to site anti-affinity, §3.4), one backup per app
-(5), latency SLO (6, encoded by filtering variables), binary x (7).
+from repro.core.planner.ilp import (PlacementResult, build_constraints,
+                                    enumerate_vars, solve_warm_placement)
 
-The paper solves this with Gurobi; no solver ships offline, so this is
-an exact branch-and-bound over the scipy/HiGHS LP relaxation, with the
-paper's own heuristic as the incumbent/warm start and as the fallback at
-scale (the paper does the same in its large-scale simulation, §5.1).
-Eq. 5 is relaxed from == 1 to <= 1 so low-headroom instances stay
-feasible; maximization makes them equal whenever the paper's form is
-feasible.
-"""
-
-from __future__ import annotations
-
-import heapq
-import itertools
-import math
-import time
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple
-
-import numpy as np
-
-from repro.core.cluster import Cluster, RESOURCES, Server
-from repro.core.variants import Application, Variant
-
-
-@dataclass
-class PlacementResult:
-    assignment: Dict[str, Tuple[Variant, str]]   # app -> (variant, server)
-    objective: float
-    optimal: bool
-    nodes: int
-    wall_s: float
-
-
-def _latency_ok(app: Application, variant: Variant, server: Server,
-                latency_fn) -> bool:
-    if latency_fn is None:
-        return True
-    return latency_fn(app, variant, server) <= app.latency_slo
-
-
-def enumerate_vars(apps: List[Application], cluster: Cluster,
-                   primaries: Dict[str, str], *,
-                   site_independence: bool = False,
-                   latency_fn=None):
-    """Filtered (app, variant, server) triples honoring Eq. 4 and 6."""
-    triples = []
-    for app in apps:
-        p_srv = primaries.get(app.id)
-        p_site = cluster.servers[p_srv].site if p_srv else None
-        for v in app.variants:
-            for srv in cluster.alive_servers():
-                if srv.id == p_srv:
-                    continue                      # Eq. 4
-                if site_independence and p_site and srv.site == p_site:
-                    continue                      # §3.4 extension
-                if not _latency_ok(app, v, srv, latency_fn):
-                    continue                      # Eq. 6
-                triples.append((app, v, srv))
-    return triples
-
-
-def solve_warm_placement(apps: List[Application], cluster: Cluster,
-                         primaries: Dict[str, str], *,
-                         alpha: float = 0.1,
-                         site_independence: bool = False,
-                         latency_fn=None,
-                         node_limit: int = 500,
-                         time_limit_s: float = 10.0) -> PlacementResult:
-    """Exact B&B over the LP relaxation (falls back to heuristic bound)."""
-    from scipy.optimize import linprog
-
-    t0 = time.time()
-    triples = enumerate_vars(apps, cluster, primaries,
-                             site_independence=site_independence,
-                             latency_fn=latency_fn)
-    if not triples:
-        return PlacementResult({}, 0.0, True, 0, time.time() - t0)
-
-    nvar = len(triples)
-    servers = cluster.alive_servers()
-    sidx = {s.id: n for n, s in enumerate(servers)}
-    aidx = {a.id: n for n, a in enumerate(apps)}
-
-    # Eq. 1 (negated: linprog minimizes)
-    c = np.array([-(t[1].accuracy * t[0].request_rate) for t in triples])
-
-    rows, cols, vals, b_ub = [], [], [], []
-    row = 0
-    # Eq. 2: per-server, per-resource capacity
-    for s in servers:
-        for r in RESOURCES:
-            for n, (app, v, srv) in enumerate(triples):
-                if srv.id == s.id:
-                    rows.append(row), cols.append(n), vals.append(v.demand[r])
-            b_ub.append(s.free(r))
-            row += 1
-    # Eq. 3: α cold-reserve on total free capacity
-    total_free = cluster.total_free()
-    for r in RESOURCES:
-        for n, (app, v, srv) in enumerate(triples):
-            rows.append(row), cols.append(n), vals.append(v.demand[r])
-        b_ub.append((1.0 - alpha) * total_free[r])
-        row += 1
-    # Eq. 5 (relaxed to <= 1)
-    for a in apps:
-        for n, (app, v, srv) in enumerate(triples):
-            if app.id == a.id:
-                rows.append(row), cols.append(n), vals.append(1.0)
-        b_ub.append(1.0)
-        row += 1
-
-    from scipy.sparse import coo_matrix
-    A = coo_matrix((vals, (rows, cols)), shape=(row, nvar)).tocsr()
-    b = np.array(b_ub)
-
-    def lp(lo, hi):
-        res = linprog(c, A_ub=A, b_ub=b, bounds=np.stack([lo, hi], axis=1),
-                      method="highs")
-        if not res.success:
-            return None, None
-        return res.fun, res.x
-
-    # incumbent from the paper's heuristic (greedy)
-    from repro.core.heuristic import faillite_heuristic
-    greedy = faillite_heuristic(
-        apps, cluster, exclude={a.id: {primaries.get(a.id)} for a in apps},
-        site_exclude={a.id: ({cluster.servers[primaries[a.id]].site}
-                             if site_independence and a.id in primaries
-                             else set()) for a in apps},
-        alpha=alpha, latency_fn=latency_fn)
-    inc_obj = -sum(v.accuracy * next(a for a in apps if a.id == i).request_rate
-                   for i, (v, s) in greedy.assignment.items())
-    incumbent = greedy.assignment
-
-    lo0 = np.zeros(nvar)
-    hi0 = np.ones(nvar)
-    nodes = 0
-    heap = []
-    root_obj, root_x = lp(lo0, hi0)
-    if root_obj is None:
-        return PlacementResult(incumbent, -inc_obj, False, 0,
-                               time.time() - t0)
-    counter = itertools.count()
-    heapq.heappush(heap, (root_obj, next(counter), lo0, hi0, root_x))
-    best_obj, best_x = inc_obj, None
-    optimal = True
-
-    while heap:
-        bound, _, lo, hi, x = heapq.heappop(heap)
-        if bound >= best_obj - 1e-9:
-            continue
-        nodes += 1
-        if nodes > node_limit or time.time() - t0 > time_limit_s:
-            optimal = False
-            break
-        frac = np.abs(x - np.round(x))
-        j = int(np.argmax(frac))
-        if frac[j] < 1e-6:
-            if bound < best_obj - 1e-9:
-                best_obj, best_x = bound, x
-            continue
-        for fix in (0.0, 1.0):
-            lo2, hi2 = lo.copy(), hi.copy()
-            lo2[j] = hi2[j] = fix
-            obj2, x2 = lp(lo2, hi2)
-            if obj2 is None or obj2 >= best_obj - 1e-9:
-                continue
-            frac2 = np.abs(x2 - np.round(x2))
-            if frac2.max() < 1e-6:
-                best_obj, best_x = obj2, x2
-            else:
-                heapq.heappush(heap, (obj2, next(counter), lo2, hi2, x2))
-
-    if best_x is None:
-        return PlacementResult(incumbent, -inc_obj, optimal, nodes,
-                               time.time() - t0)
-    assignment = {}
-    for n, (app, v, srv) in enumerate(triples):
-        if best_x[n] > 0.5:
-            assignment[app.id] = (v, srv.id)
-    return PlacementResult(assignment, -best_obj, optimal, nodes,
-                           time.time() - t0)
+__all__ = ["PlacementResult", "build_constraints", "enumerate_vars",
+           "solve_warm_placement"]

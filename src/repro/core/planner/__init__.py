@@ -1,0 +1,36 @@
+"""Pluggable planner subsystem — array-backed placement core.
+
+Public surface (see docs/PLANNER.md):
+
+  * `PlannerState` / `ScratchView` — persistent S x R capacity arrays,
+    incrementally synced from `Cluster` change notifications;
+  * `Planner` / `PlanRequest` / registry (`get_planner`,
+    `register_planner`, `available_planners`) — policy selection by
+    name: "greedy", "legacy-greedy", "ilp", "load-aware";
+  * `faillite_heuristic` (vectorized Algorithm 1), `plan_greedy`,
+    `solve_warm_placement` (Eq. 1-7 B&B), and the legacy oracle.
+
+`core/heuristic.py` and `core/placement.py` are thin compatibility
+shims re-exporting from here.
+"""
+
+from repro.core.planner.base import (HeuristicResult, PlanRequest,
+                                     PlanResult, Planner,
+                                     available_planners, eq1_objective,
+                                     get_planner, register_planner)
+from repro.core.planner.ilp import (PlacementResult, build_constraints,
+                                    enumerate_vars, solve_warm_placement)
+from repro.core.planner.legacy import (faillite_heuristic_legacy, match,
+                                       worst_fit)
+from repro.core.planner.state import PlannerState, ScratchView
+from repro.core.planner.vectorized import faillite_heuristic, plan_greedy
+from repro.core.planner import policies as _policies  # registers planners
+
+__all__ = [
+    "HeuristicResult", "PlacementResult", "PlanRequest", "PlanResult",
+    "Planner", "PlannerState", "ScratchView",
+    "available_planners", "build_constraints", "enumerate_vars",
+    "eq1_objective", "faillite_heuristic", "faillite_heuristic_legacy",
+    "get_planner", "match", "plan_greedy", "register_planner",
+    "solve_warm_placement", "worst_fit",
+]

@@ -1,0 +1,109 @@
+"""Registered placement policies.
+
+    greedy         vectorized Algorithm 1 (the paper's heuristic)
+    legacy-greedy  the original loop implementation (oracle/baseline)
+    ilp            exact B&B over Eq. 1-7 (proactive-only: realtime=False)
+    load-aware     worst-fit ranked by rate-weighted compute headroom
+
+Select by name: `get_planner("greedy")`, or through the controller /
+simulator via `FailLiteController(planner="load-aware")` /
+`SimConfig(planner="load-aware")`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cluster import RESOURCES
+from repro.core.planner.base import (PlanRequest, PlanResult, Planner,
+                                     register_planner)
+from repro.core.planner.ilp import solve_warm_placement
+from repro.core.planner.legacy import faillite_heuristic_legacy
+from repro.core.planner.vectorized import plan_greedy
+
+
+@register_planner("greedy")
+class GreedyPlanner(Planner):
+    """Algorithm 1, vectorized — the MTTR-critical default."""
+
+    realtime = True
+
+    def plan(self, req: PlanRequest) -> PlanResult:
+        exclude, site_exclude = req.exclusions()
+        return plan_greedy(req.apps, req.cluster, state=req.state,
+                           exclude=exclude, site_exclude=site_exclude,
+                           alpha=req.alpha, latency_fn=req.latency_fn)
+
+
+@register_planner("legacy-greedy")
+class LegacyGreedyPlanner(Planner):
+    """Algorithm 1, original pure-Python loops (parity oracle)."""
+
+    realtime = True
+
+    def plan(self, req: PlanRequest) -> PlanResult:
+        exclude, site_exclude = req.exclusions()
+        return faillite_heuristic_legacy(
+            req.apps, req.cluster, exclude=exclude,
+            site_exclude=site_exclude, alpha=req.alpha,
+            latency_fn=req.latency_fn)
+
+
+@register_planner("ilp")
+class IlpPlanner(Planner):
+    """Eq. 1-7 exact B&B; proactive planning only (the controller uses a
+    realtime planner on the failover hot path, as the paper does)."""
+
+    realtime = False
+
+    def __init__(self, node_limit: int = 500, time_limit_s: float = 10.0):
+        self.node_limit = node_limit
+        self.time_limit_s = time_limit_s
+
+    def plan(self, req: PlanRequest) -> PlanResult:
+        return solve_warm_placement(
+            req.apps, req.cluster, req.primaries, alpha=req.alpha,
+            site_independence=req.site_independence,
+            latency_fn=req.latency_fn, state=req.state,
+            node_limit=self.node_limit, time_limit_s=self.time_limit_s)
+
+
+@register_planner("load-aware")
+class LoadAwarePlanner(Planner):
+    """Worst-fit ranked by *projected* headroom under traffic load.
+
+    The paper's rule ranks servers by current normalized free fraction;
+    this policy instead ranks by the headroom REMAINING after placement,
+    with the candidate's compute demand amplified by the app's request
+    rate (`core/traffic.py` rates, optionally modulated by the diurnal
+    profile at plan time) — so high-traffic apps land on compute-rich
+    servers and low-traffic apps soak up memory-rich ones. Feasibility
+    (Eq. 2/3/4/6) is unchanged; only the ranking differs.
+    """
+
+    realtime = True
+
+    def __init__(self, diurnal: bool = False):
+        self.diurnal = diurnal
+
+    def plan(self, req: PlanRequest) -> PlanResult:
+        # lazy import: traffic -> controller -> planner would otherwise
+        # cycle at module-import time
+        from repro.core.traffic import diurnal_factor
+        mod = diurnal_factor(req.now) if self.diurnal else 1.0
+        ci = RESOURCES.index("compute")
+
+        def score(free, cap, d, app):
+            eff = d.copy()
+            eff[ci] *= 1.0 + mod * max(app.request_rate, 0.0)
+            return ((free - eff[None, :]) / cap).min(axis=1)
+
+        exclude, site_exclude = req.exclusions()
+        return plan_greedy(req.apps, req.cluster, state=req.state,
+                           exclude=exclude, site_exclude=site_exclude,
+                           alpha=req.alpha, latency_fn=req.latency_fn,
+                           score_fn=score)
+
+
+__all__ = ["GreedyPlanner", "LegacyGreedyPlanner", "IlpPlanner",
+           "LoadAwarePlanner"]

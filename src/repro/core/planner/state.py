@@ -1,0 +1,207 @@
+"""Array-backed placement core: the persistent, incrementally-updated
+free-capacity view every planner plans against.
+
+Layout (S servers x R resources, row order = `Cluster.servers` order):
+
+    capacity  (S, R) float64   static per-server capacity
+    free      (S, R) float64   capacity - Σ non-cold instance demand
+    alive     (S,)   bool      liveness mask
+    site_of   (S,)   int       row -> site index (anti-affinity, §3.4)
+
+Incremental-update contract: the state subscribes to `Cluster` change
+notifications (place/remove/fail/revive), marking the touched server
+*dirty*; `sync()` re-derives only the dirty rows from the cluster —
+exact (each row is recomputed with `Server.free`, so there is no
+floating-point drift from accumulated deltas) and O(dirty) instead of
+O(S·instances) per planning call. `handle_failures`/`handle_rejoin`/
+`reprotect` therefore feed server-granular deltas into one persistent
+state rather than rebuilding a view per call.
+
+`ScratchView` is the public successor of the old `_FreeView`: tentative
+take/give accounting over a copy of the free matrix, with the α-budget
+(Eq. 3) held back, used for multi-placement rounds before committing to
+the cluster.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.core.cluster import Cluster, RESOURCES
+
+_EPS = 1e-9
+
+
+def _ordered_sum(values) -> float:
+    """Left-to-right float sum, matching Python's builtin `sum` over the
+    same sequence (bit-parity with the legacy dict-based planner)."""
+    total = 0.0
+    for v in values:
+        total += float(v)
+    return total
+
+
+class PlannerState:
+    """Persistent array view of a `Cluster` (see module docstring)."""
+
+    def __init__(self, cluster: Cluster, *, subscribe: bool = True):
+        self.cluster = cluster
+        self._rebuild()
+        if subscribe:
+            cluster.subscribe(self._on_change)
+
+    # -- construction / sync ------------------------------------------------
+    def _rebuild(self):
+        servers = list(self.cluster.servers.values())
+        self.server_ids: List[str] = [s.id for s in servers]
+        self.sidx: Dict[str, int] = {sid: i for i, sid
+                                     in enumerate(self.server_ids)}
+        S, R = len(servers), len(RESOURCES)
+        self.capacity = np.array(
+            [[s.capacity[r] for r in RESOURCES] for s in servers],
+            dtype=np.float64).reshape(S, R)
+        self.free = np.zeros((S, R), dtype=np.float64)
+        self.alive = np.zeros(S, dtype=bool)
+        sites = []
+        site_idx: Dict[str, int] = {}
+        for s in servers:
+            if s.site not in site_idx:
+                site_idx[s.site] = len(sites)
+                sites.append(s.site)
+        self.site_names = sites
+        self.site_of = np.array([site_idx[s.site] for s in servers],
+                                dtype=np.int64)
+        self._dirty = set(range(S))
+        self._structure_stale = False
+
+    def _on_change(self, server_id: str):
+        i = self.sidx.get(server_id)
+        if i is None:                 # server set changed out-of-band
+            self._structure_stale = True
+        else:
+            self._dirty.add(i)
+
+    def sync(self) -> int:
+        """Re-derive dirty rows from the cluster; returns rows touched."""
+        if self._structure_stale:
+            self._rebuild()
+            self._structure_stale = False
+        if not self._dirty:
+            return 0
+        n = len(self._dirty)
+        for i in self._dirty:
+            srv = self.cluster.servers[self.server_ids[i]]
+            for j, r in enumerate(RESOURCES):
+                self.free[i, j] = srv.free(r)
+            self.alive[i] = srv.alive
+        self._dirty.clear()
+        return n
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def n_dirty(self) -> int:
+        return len(self._dirty)
+
+    def alive_rows(self) -> np.ndarray:
+        """Row indices of alive servers, in cluster order (the legacy
+        `alive_servers()` iteration order)."""
+        return np.flatnonzero(self.alive)
+
+    def mask_of(self, server_ids: Iterable[str], rows: np.ndarray,
+                ) -> np.ndarray:
+        """Bool mask (len(rows),) — True where the row's server is in
+        `server_ids` (unknown/dead ids are ignored)."""
+        pos = {int(i): k for k, i in enumerate(rows)}
+        out = np.zeros(len(rows), dtype=bool)
+        for sid in server_ids:
+            i = self.sidx.get(sid) if sid else None
+            if i is not None and i in pos:
+                out[pos[i]] = True
+        return out
+
+    def worst_fit(self, demand: Dict[str, float],
+                  excluded: Iterable[str] = ()) -> Optional[str]:
+        """Most-headroom alive server fitting `demand` (Alg. 1 line 9);
+        first-maximum tie-break, matching the legacy loop."""
+        self.sync()
+        rows = self.alive_rows()
+        if rows.size == 0:
+            return None
+        d = np.array([demand[r] for r in RESOURCES], dtype=np.float64)
+        free = self.free[rows]
+        # global budget: with no α-reserve this equals total free, which
+        # can never bind when a per-server fit passes (free is
+        # non-negative); kept as a cheap defensive vectorized check
+        if (free.sum(axis=0) < d - _EPS).any():
+            return None
+        feas = (free >= d - _EPS).all(axis=1)
+        if excluded:
+            feas &= ~self.mask_of(excluded, rows)
+        if not feas.any():
+            return None
+        head = (free / self.capacity[rows]).min(axis=1)
+        i = int(np.argmax(np.where(feas, head, -np.inf)))
+        return self.server_ids[int(rows[i])]
+
+    def scratch(self, reserve_frac: float = 0.0) -> "ScratchView":
+        return ScratchView(self, reserve_frac=reserve_frac)
+
+
+class ScratchView:
+    """Tentative free-capacity accounting over the alive rows of a
+    `PlannerState` — array-backed replacement for the old `_FreeView`."""
+
+    def __init__(self, state: PlannerState, reserve_frac: float = 0.0):
+        state.sync()
+        self.state = state
+        self.rows = state.alive_rows()
+        self.ids = [state.server_ids[int(i)] for i in self.rows]
+        self.pos = {sid: k for k, sid in enumerate(self.ids)}
+        self.free = state.free[self.rows].copy()
+        self.cap = state.capacity[self.rows].copy()
+        # α-reserve (Eq. 3): hold back a fraction of TOTAL free capacity;
+        # ordered sums keep bit-parity with the legacy implementation
+        self.budget = np.array(
+            [(1.0 - reserve_frac) * _ordered_sum(self.free[:, j])
+             for j in range(len(RESOURCES))], dtype=np.float64)
+
+    def _vec(self, demand: Dict[str, float]) -> np.ndarray:
+        return np.array([demand[r] for r in RESOURCES], dtype=np.float64)
+
+    def fits(self, sid: str, demand: Dict[str, float]) -> bool:
+        d = self._vec(demand)
+        k = self.pos[sid]
+        return (bool((self.free[k] >= d - _EPS).all())
+                and bool((self.budget >= d - _EPS).all()))
+
+    def take(self, sid: str, demand: Dict[str, float]):
+        d = self._vec(demand)
+        self.free[self.pos[sid]] -= d
+        self.budget -= d
+
+    def give(self, sid: str, demand: Dict[str, float]):
+        d = self._vec(demand)
+        self.free[self.pos[sid]] += d
+        self.budget += d
+
+    def headroom(self, sid: str) -> float:
+        k = self.pos[sid]
+        return float((self.free[k] / self.cap[k]).min())
+
+    def worst_fit(self, demand: Dict[str, float],
+                  excluded: Iterable[str] = ()) -> Optional[str]:
+        d = self._vec(demand)
+        if not (self.budget >= d - _EPS).all():
+            return None
+        feas = (self.free >= d - _EPS).all(axis=1)
+        for sid in excluded:
+            k = self.pos.get(sid)
+            if k is not None:
+                feas[k] = False
+        if not feas.any():
+            return None
+        head = (self.free / self.cap).min(axis=1)
+        k = int(np.argmax(np.where(feas, head, -np.inf)))
+        return self.ids[k]

@@ -111,6 +111,9 @@ class SimConfig:
     policy: str = "faillite"
     site_independence: bool = False
     use_ilp: bool = False
+    # placement policy by registry name (docs/PLANNER.md): "greedy",
+    # "ilp", "load-aware", "legacy-greedy"; None = use_ilp-derived default
+    planner: Optional[str] = None
     seed: int = 0
     # request-level traffic plane: requests/s generated per unit app
     # rate q_i (0 disables the plane) and the bulk-generation window
@@ -216,7 +219,7 @@ class Simulation:
             self.cluster, self.clock, self.executor,
             policy=cfg.policy, alpha=cfg.alpha,
             site_independence=cfg.site_independence, use_ilp=cfg.use_ilp,
-            detector=self.detector)
+            planner=cfg.planner, detector=self.detector)
         self.apps = apps if apps is not None else synthetic_apps(
             cfg, self.rng)
         # per-server "other tenants" reservation, recorded at setup so a

@@ -1,0 +1,255 @@
+"""Planner subsystem: vectorized-vs-legacy parity, array-state
+incremental sync, policy registry, and controller integration.
+
+The parity test is the load-bearing one: the vectorized Algorithm 1
+(planner/vectorized.py) must reproduce the legacy loop implementation
+(planner/legacy.py) EXACTLY — same assignments, same unplaced list,
+bit-identical Eq. 1 objective — across seeded random clusters,
+exclusions, α values, and latency SLOs."""
+
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import Cluster, RESOURCES, Server, make_cluster
+from repro.core.planner import (PlanRequest, PlannerState,
+                                available_planners, eq1_objective,
+                                faillite_heuristic,
+                                faillite_heuristic_legacy, get_planner)
+from repro.core.variants import Application, synthetic_family
+
+
+def _rand_cluster(rng: random.Random) -> Cluster:
+    """Heterogeneous cluster: 1-3 sites, uneven per-server capacity."""
+    servers = []
+    n_sites = rng.randint(1, 3)
+    for si in range(n_sites):
+        for sj in range(rng.randint(2, 5)):
+            servers.append(Server(
+                id=f"s{si}-{sj}", site=f"site{si}",
+                capacity={"mem": rng.uniform(6e9, 24e9),
+                          "compute": rng.uniform(0.5, 2.0)}))
+    return Cluster(servers)
+
+
+def _rand_apps(rng: random.Random, n: int):
+    out = []
+    for i in range(n):
+        lad = synthetic_family(f"f{i}", rng.uniform(0.3e9, 6e9),
+                               n_variants=rng.randint(2, 6),
+                               spread=rng.uniform(1.5, 12.0))
+        out.append(Application(
+            id=f"a{i}", family=f"f{i}", variants=lad,
+            request_rate=rng.uniform(0.2, 3.0),
+            latency_slo=(rng.uniform(0.005, 0.05)
+                         if rng.random() < 0.5 else math.inf),
+            critical=rng.random() < 0.5))
+    return out
+
+
+def _lat_fn(app, variant, server):
+    """Deterministic synthetic latency: per-server distance + size term."""
+    return (0.002 * (sum(map(ord, server.id)) % 7)
+            + variant.mem_bytes / 1e12 + 0.001)
+
+
+def _norm(res):
+    return ({k: (v.name, s) for k, (v, s) in res.assignment.items()},
+            list(res.unplaced))
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_vectorized_matches_legacy(seed):
+    """Seeded property test: identical assignments AND identical Eq. 1
+    objective bits across random instances (tentpole acceptance)."""
+    rng = random.Random(seed * 1009 + 7)
+    cluster = _rand_cluster(rng)
+    apps = _rand_apps(rng, rng.randint(1, 25))
+    sids = list(cluster.servers)
+    exclude = {a.id: {rng.choice(sids)} for a in apps
+               if rng.random() < 0.7}
+    site_exclude = {a.id: {f"site{rng.randrange(3)}"} for a in apps
+                    if rng.random() < 0.3}
+    alpha = rng.choice([0.0, 0.1, 0.25, 0.5])
+    latency_fn = _lat_fn if rng.random() < 0.5 else None
+    # make some instances capacity-starved: pre-place primaries
+    for a in apps[::3]:
+        sid = rng.choice(sids)
+        if cluster.servers[sid].fits(a.variants[-1].demand):
+            cluster.place(a.id, a.variants[-1], sid, "primary")
+
+    old = faillite_heuristic_legacy(apps, cluster, exclude=exclude,
+                                    site_exclude=site_exclude,
+                                    alpha=alpha, latency_fn=latency_fn)
+    new = faillite_heuristic(apps, cluster, exclude=exclude,
+                             site_exclude=site_exclude,
+                             alpha=alpha, latency_fn=latency_fn)
+    assert _norm(old) == _norm(new)
+    assert old.objective == new.objective      # bit-identical
+
+
+def test_parity_with_dead_servers_and_empty_edge_cases():
+    rng = random.Random(42)
+    cluster = _rand_cluster(rng)
+    apps = _rand_apps(rng, 8)
+    for sid in list(cluster.servers)[::2]:
+        cluster.fail_server(sid)
+    old = faillite_heuristic_legacy(apps, cluster, alpha=0.1)
+    new = faillite_heuristic(apps, cluster, alpha=0.1)
+    assert _norm(old) == _norm(new)
+    assert old.objective == new.objective
+    # no apps
+    assert _norm(faillite_heuristic([], cluster)) == ({}, [])
+    # no alive servers
+    for sid in cluster.servers:
+        cluster.fail_server(sid)
+    res = faillite_heuristic(apps, cluster)
+    ref = faillite_heuristic_legacy(apps, cluster)
+    assert _norm(res) == _norm(ref)
+    assert res.assignment == {}
+
+
+def test_objective_is_eq1():
+    """Satellite: heuristic reports Σ accuracy·rate (Eq. 1), not raw
+    accuracy, so ILP and heuristic compare like with like."""
+    rng = random.Random(0)
+    cluster = make_cluster(1, 4, mem=32e9)
+    apps = _rand_apps(rng, 5)
+    res = faillite_heuristic(apps, cluster)
+    rate = {a.id: a.request_rate for a in apps}
+    want = sum(v.accuracy * rate[aid] for aid, (v, _) in
+               res.assignment.items())
+    assert res.objective == pytest.approx(want, abs=1e-12)
+    assert res.objective == eq1_objective(res.assignment, apps)
+
+
+# ---------------------------------------------------------------------------
+# PlannerState incremental sync
+# ---------------------------------------------------------------------------
+
+def _fresh(cluster):
+    st = PlannerState(cluster, subscribe=False)
+    st.sync()
+    return st
+
+
+def test_state_incremental_matches_rebuild():
+    """Place / fail / revive / remove feed per-server deltas; the synced
+    persistent state must equal a from-scratch rebuild exactly."""
+    rng = random.Random(1)
+    cluster = make_cluster(2, 3, mem=16e9)
+    state = PlannerState(cluster)          # subscribes to cluster
+    state.sync()
+    apps = _rand_apps(rng, 6)
+    keys = {}
+    for i, a in enumerate(apps):
+        sid = list(cluster.servers)[i % 6]
+        keys[a.id] = cluster.place(a.id, a.full, sid, "primary")
+    assert state.n_dirty > 0               # deltas were observed
+    state.sync()
+    ref = _fresh(cluster)
+    assert np.array_equal(state.free, ref.free)
+    assert np.array_equal(state.alive, ref.alive)
+
+    cluster.fail_server("s0-0")
+    cluster.remove(keys[apps[1].id], list(cluster.servers)[1])
+    cluster.revive_server("s0-0")          # returns empty
+    cluster.remove_app(apps[2].id)
+    state.sync()
+    ref = _fresh(cluster)
+    assert np.array_equal(state.free, ref.free)
+    assert np.array_equal(state.alive, ref.alive)
+    # dirty set is now empty: a no-op sync touches nothing
+    assert state.sync() == 0
+
+
+def test_state_worst_fit_matches_legacy_freeview():
+    from repro.core.planner.legacy import _FreeView, worst_fit
+    rng = random.Random(5)
+    for _ in range(10):
+        cluster = _rand_cluster(rng)
+        if rng.random() < 0.5:
+            cluster.fail_server(rng.choice(list(cluster.servers)))
+        state = PlannerState(cluster)
+        demand = {"mem": rng.uniform(1e9, 20e9),
+                  "compute": rng.uniform(0.1, 1.5)}
+        excl = ({rng.choice(list(cluster.servers))}
+                if rng.random() < 0.5 else set())
+        view = _FreeView(cluster.alive_servers())
+        assert (state.worst_fit(demand, excl)
+                == worst_fit(view, demand, excl))
+
+
+# ---------------------------------------------------------------------------
+# registry + controller integration
+# ---------------------------------------------------------------------------
+
+def test_registry_contents_and_errors():
+    names = available_planners()
+    for want in ("greedy", "ilp", "legacy-greedy", "load-aware"):
+        assert want in names
+    with pytest.raises(KeyError, match="unknown planner"):
+        get_planner("no-such-policy")
+    assert get_planner("ilp").realtime is False
+    assert get_planner("greedy").realtime is True
+
+
+def test_load_aware_is_feasible_and_placed():
+    rng = random.Random(9)
+    cluster = make_cluster(2, 4, mem=24e9)
+    apps = _rand_apps(rng, 10)
+    res = get_planner("load-aware").plan(
+        PlanRequest(apps=apps, cluster=cluster, alpha=0.1))
+    used = {s.id: {r: 0.0 for r in RESOURCES} for s in cluster.servers.values()}
+    for aid, (v, sid) in res.assignment.items():
+        for r in RESOURCES:
+            used[sid][r] += v.demand[r]
+    for s in cluster.alive_servers():
+        for r in RESOURCES:
+            assert used[s.id][r] <= s.free(r) + 1e-6
+    assert set(res.assignment) | set(res.unplaced) == {a.id for a in apps}
+
+
+@pytest.mark.parametrize("name", ["greedy", "load-aware", "legacy-greedy"])
+def test_controller_runs_with_any_registered_planner(name):
+    """Acceptance: FailLiteController selects planners by name without
+    importing planner internals."""
+    from repro.core.simulation import SimConfig, Simulation
+    cfg = SimConfig(n_sites=2, servers_per_site=3, server_mem=24e9,
+                    planner=name, traffic_rate_scale=0.0, seed=3)
+    sim = Simulation(cfg).setup()
+    assert sim.controller.planner.name == name
+    victim = sim.controller.primaries[next(iter(sim.controller.apps))]
+    res = sim.inject_failure(servers=[victim], run_for=30.0)
+    assert res.n_affected > 0
+    assert res.recovery_rate > 0.0
+    assert sim.controller.plan_wall_s > 0.0
+
+
+def test_controller_has_no_private_freeview_dependency():
+    """Satellite: the underscore import is gone for good."""
+    import inspect
+    import repro.core.controller as ctl
+    src = inspect.getsource(ctl)
+    assert "_FreeView" not in src
+    assert "from repro.core.heuristic import" not in src
+
+
+def test_ilp_planner_via_registry_dominates_greedy():
+    rng = random.Random(11)
+    cluster = make_cluster(2, 3, mem=8e9)
+    apps = _rand_apps(rng, 6)
+    primaries = {}
+    for i, a in enumerate(apps):
+        sid = cluster.alive_servers()[i % 6].id
+        cluster.place(a.id, a.variants[-1], sid, "primary")
+        primaries[a.id] = sid
+    req = PlanRequest(apps=apps, cluster=cluster, primaries=primaries,
+                      alpha=0.1)
+    ilp = get_planner("ilp").plan(req)
+    greedy = get_planner("greedy").plan(req)
+    assert ilp.objective >= greedy.objective - 1e-6
+    for aid, (v, sid) in ilp.assignment.items():
+        assert sid != primaries[aid]

@@ -1,0 +1,184 @@
+#!/usr/bin/env python
+"""Planner micro-benchmark -> BENCH_planner.json.
+
+Times the legacy loop implementation of Algorithm 1 against the
+vectorized planner (and the load-aware policy) across fleet sizes, plus
+the Eq. 1-7 B&B ILP at testbed scale, and writes one JSON document the
+perf trajectory can track:
+
+    PYTHONPATH=src python tools/bench_planner.py                # full
+    PYTHONPATH=src python tools/bench_planner.py --smoke        # CI
+    PYTHONPATH=src python tools/bench_planner.py \
+        --scales 1000:100 --check-speedup 5.0
+
+Each scale point reports legacy/vectorized/load-aware wall time, the
+legacy->vectorized speedup, placements, and the (identical) Eq. 1
+objective. `--check-speedup X` exits non-zero unless the LARGEST scale
+point reaches an X-fold speedup — the acceptance gate for the
+array-backed planner refactor.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+FULL_SCALES = [(100, 20), (250, 50), (500, 50), (1000, 100), (2000, 150)]
+SMOKE_SCALES = [(50, 10), (200, 20)]
+ILP_SIZES = [(6, 8), (8, 12)]           # (servers, apps), testbed scale
+
+
+def make_instance(n_apps: int, n_servers: int, n_variants: int = 6,
+                  seed: int = 0):
+    from repro.core.cluster import make_cluster
+    from repro.core.variants import Application, synthetic_family
+
+    rng = random.Random(seed)
+    cluster = make_cluster(max(1, n_servers // 10), min(n_servers, 10),
+                           mem=64e9)
+    apps = []
+    for i in range(n_apps):
+        lad = synthetic_family(f"f{i}", rng.uniform(1e9, 4e9),
+                               n_variants=n_variants)
+        apps.append(Application(id=f"a{i}", family=f"f{i}", variants=lad,
+                                request_rate=rng.uniform(0.5, 2.0),
+                                critical=rng.random() < 0.5))
+    return apps, cluster
+
+
+def time_planner(name: str, apps, cluster, repeats: int = 1) -> dict:
+    from repro.core.planner import PlanRequest, get_planner
+
+    planner = get_planner(name)
+    best, res = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = planner.plan(PlanRequest(apps=apps, cluster=cluster,
+                                       alpha=0.1))
+        best = min(best, time.perf_counter() - t0)
+    return {"wall_s": best, "placed": len(res.assignment),
+            "objective": round(res.objective, 6)}
+
+
+def bench_heuristics(scales, repeats: int) -> list:
+    points = []
+    for n_apps, n_servers in scales:
+        apps, cluster = make_instance(n_apps, n_servers)
+        row = {"n_apps": n_apps, "n_servers": n_servers}
+        for name in ("legacy-greedy", "greedy", "load-aware"):
+            r = time_planner(name, apps, cluster,
+                             repeats=1 if name == "legacy-greedy"
+                             else repeats)
+            key = {"legacy-greedy": "legacy", "greedy": "vectorized",
+                   "load-aware": "load_aware"}[name]
+            row[f"{key}_s"] = round(r["wall_s"], 6)
+            row[f"{key}_placed"] = r["placed"]
+            if key in ("legacy", "vectorized"):
+                row[f"{key}_objective"] = r["objective"]
+        row["speedup"] = round(row["legacy_s"]
+                               / max(row["vectorized_s"], 1e-12), 2)
+        row["parity"] = (row["legacy_objective"]
+                         == row["vectorized_objective"]
+                         and row["legacy_placed"]
+                         == row["vectorized_placed"])
+        points.append(row)
+        print(f"planner,{n_apps},{n_servers},"
+              f"legacy={row['legacy_s']:.4f}s,"
+              f"vectorized={row['vectorized_s']:.4f}s,"
+              f"speedup={row['speedup']:.1f}x,"
+              f"parity={int(row['parity'])}", flush=True)
+    return points
+
+
+def bench_ilp(sizes) -> list:
+    from repro.core.planner import PlanRequest, get_planner
+
+    out = []
+    for n_servers, n_apps in sizes:
+        apps, cluster = make_instance(n_apps, n_servers, n_variants=4,
+                                      seed=42)
+        primaries = {}
+        servers = cluster.alive_servers()
+        for i, a in enumerate(apps):
+            sid = servers[i % len(servers)].id
+            cluster.place(a.id, a.variants[-1], sid, "primary")
+            primaries[a.id] = sid
+        req = PlanRequest(apps=apps, cluster=cluster, primaries=primaries,
+                          alpha=0.1)
+        t0 = time.perf_counter()
+        ilp = get_planner("ilp", node_limit=300, time_limit_s=20.0).plan(req)
+        t_ilp = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        heur = get_planner("greedy").plan(req)
+        t_heur = time.perf_counter() - t0
+        gap = 100.0 * (ilp.objective - heur.objective) \
+            / max(ilp.objective, 1e-9)
+        out.append({"n_servers": n_servers, "n_apps": n_apps,
+                    "ilp_s": round(t_ilp, 4), "heur_s": round(t_heur, 6),
+                    "ilp_objective": round(ilp.objective, 6),
+                    "heur_objective": round(heur.objective, 6),
+                    "gap_pct": round(gap, 3),
+                    "optimal": bool(ilp.optimal)})
+        print(f"ilp,{n_servers},{n_apps},ilp={t_ilp:.2f}s,"
+              f"heur={t_heur:.4f}s,gap={gap:.2f}%", flush=True)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_planner.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small scales for CI (no ILP beyond smallest)")
+    ap.add_argument("--scales", default=None,
+                    help="comma-separated apps:servers pairs")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="best-of repeats for the fast planners")
+    ap.add_argument("--check-speedup", type=float, default=None,
+                    help="fail unless the largest point reaches this "
+                         "legacy->vectorized speedup")
+    args = ap.parse_args()
+
+    if args.scales:
+        scales = [tuple(int(x) for x in s.split(":"))
+                  for s in args.scales.split(",")]
+    else:
+        scales = SMOKE_SCALES if args.smoke else FULL_SCALES
+    ilp_sizes = ILP_SIZES[:1] if args.smoke else ILP_SIZES
+
+    points = bench_heuristics(scales, args.repeats)
+    ilp = bench_ilp(ilp_sizes)
+
+    doc = {
+        "bench": "planner",
+        "description": "Algorithm 1 legacy loop vs vectorized planner "
+                       "wall time by fleet size; Eq. 1-7 B&B ILP at "
+                       "testbed scale",
+        "unit": "seconds",
+        "heuristic": points,
+        "ilp": ilp,
+    }
+    Path(args.out).write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+    if not all(p["parity"] for p in points):
+        print("FAIL: vectorized planner diverged from legacy", flush=True)
+        return 1
+    if args.check_speedup is not None:
+        top = max(points, key=lambda p: p["n_apps"])
+        if top["speedup"] < args.check_speedup:
+            print(f"FAIL: speedup {top['speedup']}x at "
+                  f"{top['n_apps']} apps < {args.check_speedup}x")
+            return 1
+        print(f"ok: {top['speedup']}x >= {args.check_speedup}x at "
+              f"{top['n_apps']} apps")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
