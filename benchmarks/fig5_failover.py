@@ -1,58 +1,71 @@
 """Fig. 5 — failover behavior by backup type, single application.
 
 Warm vs cold(small) vs cold(large) vs FailLite progressive, as recovery
-timelines from the DES with testbed-profiled load constants. Controller
-MTTR is reported next to the request-level client-observed MTTR (§5.7
-framing): the latter runs from the crash instant until a client request
-actually succeeded again, so it adds detection lead-in, route
-propagation, and arrival discretization on top of the controller's view.
+timelines from one `ExperimentSpec` per mode (thin client of
+`repro.experiment`). Controller MTTR is reported next to the
+request-level client-observed MTTR (§5.7 framing): the latter runs from
+the crash instant until a client request actually succeeded again, so
+it adds detection lead-in, route propagation, and arrival
+discretization on top of the controller's view.
+
+`backend="testbed"` replays the same four specs against live workers
+with a real (reduced-config) model ladder — MTTRs become wall-clock
+compile-bound load times.
 """
 
 from __future__ import annotations
 
+MODES = [
+    ("warm", "faillite", True),
+    ("cold-small", "full-cold", False),
+    ("cold-large", "full-cold", False),
+    ("progressive", "faillite", False),
+]
 
-def run(quick: bool = True):
-    from repro.core.simulation import (SimConfig, Simulation, EventQueue,
-                                       SimLoadExecutor)
-    from repro.core.variants import synthetic_family, Application
 
-    ladder = synthetic_family("convnext", 5.0e9, n_variants=4, spread=6.0)
+def _ladder(backend: str):
+    if backend == "testbed":
+        from repro.experiment import testbed_ladder
+        return testbed_ladder("qwen2.5-3b")
+    from repro.core.variants import synthetic_family
+    return synthetic_family("convnext", 5.0e9, n_variants=4, spread=6.0)
+
+
+def run(quick: bool = True, backend: str = "sim"):
+    from repro.core.variants import Application
+    from repro.experiment import (ExperimentSpec, primary_kill_scenario,
+                                  run_experiment)
+
+    ladder = _ladder(backend)
     rows = []
-    for mode, policy, critical in [
-        ("warm", "faillite", True),
-        ("cold-small", "full-cold", False),
-        ("cold-large", "full-cold", False),
-        ("progressive", "faillite", False),
-    ]:
+    for mode, policy, critical in MODES:
         variants = ladder
         if mode == "cold-small":
             variants = [ladder[-1]]      # only the small model exists
-        app = Application(id="app0", family="convnext",
+        app = Application(id="app0", family=ladder[0].family,
                           variants=list(variants), critical=critical,
                           request_rate=2.0)
-        cfg = SimConfig(n_sites=2, servers_per_site=2, policy=policy,
-                        server_mem=16e9, headroom=0.45,
-                        traffic_rate_scale=100.0)
-        sim = Simulation(cfg, apps=[app]).setup()
-        victim = sim.controller.primaries["app0"]
-        res = sim.inject_failure(servers=[victim])
-        rec = res.records["app0"]
+        spec = ExperimentSpec(
+            backend=backend, policy=policy, n_sites=2,
+            servers_per_site=2, headroom=0.45,
+            traffic_rate_scale=100.0, client_hz=40.0, time_scale=0.25,
+            settle_s=(None if backend == "sim" else 15.0),
+            scenario="primary-kill",
+            scenario_builder=primary_kill_scenario(), apps=[app])
+        res = run_experiment(spec)
+        rec = next(r for r in res.records if r.app_id == "app0")
         t = res.traffic
-        # inf (never recovered / no windows recovered) prints as the
-        # same -1.0 sentinel the controller MTTR column uses
         client_mttr = (t.client_mttr_avg
                        if t is not None and t.n_windows else 0.0)
         dropped = t.n_dropped if t else 0
         rows.append((mode, rec.recovered, rec.mttr, client_mttr,
                      dropped, rec.variant, rec.accuracy))
+    from repro.experiment.result import ms_sentinel
     print("# fig5: mode,recovered,ctl_mttr_ms,client_mttr_ms,"
           "req_dropped,variant,acc")
-    import math
     for r in rows:
-        ctl = r[2] * 1e3 if math.isfinite(r[2]) else -1.0
-        cli = r[3] * 1e3 if math.isfinite(r[3]) else -1.0
-        print(f"fig5,{r[0]},{r[1]},{ctl:.1f},{cli:.1f},"
-              f"{r[4]},{r[5]},{r[6]:.4f}")
+        print(f"fig5,{r[0]},{r[1]},{ms_sentinel(r[2]):.1f},"
+              f"{ms_sentinel(r[3]):.1f},{r[4]},{r[5]},{r[6]:.4f}")
     return rows
 
 

@@ -1,45 +1,58 @@
-"""Fig. 7 + §5.7 overheads — real mini-testbed: recovery rate and MTTR
-across FailLite and the three full-size baselines, real failure
-injection, real (compile-bound) model loads, client-observed downtime.
+"""Fig. 7 + §5.7 overheads — recovery rate and MTTR across FailLite and
+the three full-size baselines under real failure injection on the
+mini-testbed (real compile-bound model loads, client-observed downtime).
+
+A thin client of `repro.experiment`: one spec per policy, default
+backend "testbed" (the figure's native engine); `--backend sim` replays
+the IDENTICAL specs — same arch workload, same capacity sizing rule,
+same scenario — on the discrete-event simulator, which is the
+cross-backend parity check in benchmark form.
 
 Reports controller MTTR (`ctl_mttr_ms`) next to the client-observed
-downtime measured from the request stream (`client_mttr_ms`) — the
-wall-clock analogue of the request-level metrics the simulator's
-traffic plane produces (see core/metrics.py and benchmarks/scenarios.py
-for the simulated counterpart).
+downtime measured from the request stream (`client_mttr_ms`), both
+computed by the shared `core/metrics.py` aggregation.
 """
 
 from __future__ import annotations
 
 
-def run(quick: bool = True):
-    from repro.serving.testbed import MiniTestbed
+def run(quick: bool = True, backend: str = "testbed"):
+    import math
+
+    from repro.experiment import (ExperimentSpec, primary_kill_scenario,
+                                  run_experiment)
 
     archs = (["qwen2.5-3b", "rwkv6-3b"] if quick else
              ["qwen2.5-3b", "rwkv6-3b", "recurrentgemma-2b",
               "qwen3-moe-30b-a3b"])
     policies = (["faillite", "full-warm-k"] if quick
                 else ["faillite", "full-warm", "full-cold", "full-warm-k"])
-    print("# fig7: policy,n,recovery_rate,ctl_mttr_ms,acc_red_pct,"
-          "detect_ms,client_mttr_ms")
+    print("# fig7: backend,policy,n,recovery_rate,ctl_mttr_ms,"
+          "acc_red_pct,detect_ms,client_mttr_ms")
     rows = []
     for policy in policies:
-        tb = MiniTestbed(apps_per_arch=1, archs=archs, seed=2,
-                         headroom=0.3, policy=policy)
-        tb.deploy()
-        res = tb.run_failure_experiment(observe_s=30.0, client_hz=10.0)
-        s = res["summary"]
-        downs = [st.downtime for st in res["client_stats"].values()
-                 if st.downtime]
-        down_ms = (sum(downs) / len(downs) * 1e3) if downs else float("nan")
+        spec = ExperimentSpec(
+            backend=backend, policy=policy, app_mix="arch", archs=archs,
+            apps_per_arch=1, seed=2, n_sites=3, servers_per_site=2,
+            headroom=0.3, client_hz=10.0, time_scale=0.25,
+            settle_s=(None if backend == "sim" else 25.0),
+            scenario="primary-kill",
+            scenario_builder=primary_kill_scenario())
+        res = run_experiment(spec)
+        s = res.overall
+        t = res.traffic
+        down_ms = (t.client_mttr_avg * 1e3
+                   if t and math.isfinite(t.client_mttr_avg)
+                   else float("nan"))
+        detect_ms = (res.detect_latency_s * 1e3
+                     if math.isfinite(res.detect_latency_s) else 0.0)
         rows.append((policy, s["n"], s["recovery_rate"],
                      s["mttr_avg"] * 1e3,
-                     s["accuracy_reduction"] * 100,
-                     res["detect_latency_s"] * 1e3, down_ms))
-        print(f"fig7,{policy},{s['n']},{s['recovery_rate']:.2f},"
-              f"{s['mttr_avg']*1e3:.0f},{s['accuracy_reduction']*100:.2f},"
-              f"{res['detect_latency_s']*1e3:.0f},{down_ms:.0f}")
-        tb.shutdown()
+                     s["accuracy_reduction"] * 100, detect_ms, down_ms))
+        print(f"fig7,{backend},{policy},{s['n']},"
+              f"{s['recovery_rate']:.2f},{s['mttr_avg']*1e3:.0f},"
+              f"{s['accuracy_reduction']*100:.2f},{detect_ms:.0f},"
+              f"{down_ms:.0f}")
     return rows
 
 

@@ -9,6 +9,7 @@ reproduces the paper-scale sweeps).
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -40,6 +41,11 @@ def main() -> None:
                     help="comma-separated subset of modules")
     ap.add_argument("--skip-testbed", action="store_true",
                     help="skip the wall-clock mini-testbed benchmark")
+    ap.add_argument("--backend", default=None,
+                    choices=["sim", "testbed"],
+                    help="execution backend for the experiment-API "
+                         "figures (fig5/fig7/scenarios); each keeps its "
+                         "native default otherwise")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: quick mode over every figure script, "
                          "skipping compile-heavy kernel/testbed benches; "
@@ -64,7 +70,11 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            mod.run(quick=not args.full)
+            kw = {}
+            if (args.backend is not None
+                    and "backend" in inspect.signature(mod.run).parameters):
+                kw["backend"] = args.backend
+            mod.run(quick=not args.full, **kw)
             print(f"=== {name} done in {time.time()-t0:.1f}s ===",
                   flush=True)
         except Exception:

@@ -1,5 +1,8 @@
 """Scenario sweep — all four policies over the named failure-scenario
-library (cascades, rolling rejoin, churn, flaky nodes, ...).
+library (cascades, rolling rejoin, churn, flaky nodes, ...), as a thin
+client of `repro.experiment`: one `ExperimentSpec` per cell, so the
+same sweep runs on either backend (`--backend testbed` replays a
+reduced cell matrix against live workers).
 
 Beyond the paper's one-shot injections, every cell reports BOTH planes:
 
@@ -8,7 +11,7 @@ Beyond the paper's one-shot injections, every cell reports BOTH planes:
     re-protection recovery are visible;
   * request plane (what clients experienced, §5.7 framing): availability,
     client-observed MTTR, accuracy-weighted goodput, dropped/degraded/
-    SLO-violated request counts, and latency-proxy percentiles.
+    SLO-violated request counts, and latency percentiles.
 
 Client-observed MTTR upper-bounds controller MTTR: clients keep failing
 from the crash instant (before detection) until the re-route push
@@ -19,35 +22,37 @@ reaches them and a request actually succeeds.
 
 from __future__ import annotations
 
-
-def _ms(seconds: float) -> float:
-    """Milliseconds, with the same -1.0 sentinel the controller MTTR
-    column uses for 'nothing recovered' (inf)."""
-    import math
-    return seconds * 1e3 if math.isfinite(seconds) else -1.0
+POLICIES = ("faillite", "full-warm", "full-cold", "full-warm-k")
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, backend: str = "sim"):
     from repro.core.scenario import SCENARIOS
-    from repro.core.simulation import SimConfig, run_scenario_suite
+    from repro.experiment import ExperimentSpec, run_experiment
+    from repro.experiment.result import ms_sentinel as _ms
 
-    scale = (dict(n_sites=4, servers_per_site=5) if quick
-             else dict(n_sites=10, servers_per_site=10))
     names = sorted(SCENARIOS)
     if quick:
         # keep every *required* scenario class, one representative each
         names = ["single-server", "site-outage", "cascade",
                  "rolling-with-rejoin", "churn-under-failure"]
-    cfg = SimConfig(headroom=0.2, seed=0, **scale)
+    if backend == "testbed":
+        # live workers: compile-bound loads make the full matrix hours;
+        # sweep the base case across policies at the smoke scale
+        names = ["single-server"]
+        base = ExperimentSpec.smoke("testbed")
+    else:
+        scale = (dict(n_sites=4, servers_per_site=5) if quick
+                 else dict(n_sites=10, servers_per_site=10))
+        base = ExperimentSpec(headroom=0.2, seed=0, **scale)
 
     print("# scenarios: scenario,policy,epoch,n,recovery_rate,"
           "ctl_mttr_ms,acc_red_pct,warm_cov,unplaced,"
           "req_dropped,client_mttr_ms")
     print("# scenarios-traffic: scenario,policy,req_offered,availability,"
           "client_mttr_ms,goodput,degraded,slo_viol,p50_ms,p99_ms")
-    suite = run_scenario_suite(cfg, names=names)
     for name in names:
-        for policy, res in suite[name].items():
+        for policy in POLICIES:
+            res = run_experiment(base.with_(scenario=name, policy=policy))
             for ep, s in enumerate(res.per_epoch):
                 mttr = (s["mttr_avg"] * 1e3
                         if s["mttr_avg"] != float("inf") else -1.0)

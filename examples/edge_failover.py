@@ -1,16 +1,18 @@
 """End-to-end serving driver: REAL failure injection on the mini-testbed.
 
-Six worker threads host real JAX inference engines (reduced configs of
-the assigned architectures) behind the FailLite controller.  Clients
-issue batched requests at 10 Hz; one server is crashed mid-flight; the
-heartbeat detector fires, the two-step failover re-homes the affected
-app, and client-observed downtime is reported next to the controller's
-MTTR accounting.
+Worker threads host real JAX inference engines (reduced configs of the
+assigned architectures) behind the FailLite controller.  Clients issue
+batched requests; one server is crashed mid-flight; the heartbeat
+detector fires, the two-step failover re-homes the affected app, and
+client-observed downtime is reported next to the controller's MTTR
+accounting — all through the same `ExperimentSpec` API the simulator
+uses (`--backend sim` runs the identical experiment there).
 
     PYTHONPATH=src python examples/edge_failover.py [--policy full-cold]
 """
 
 import argparse
+import math
 
 
 def main():
@@ -18,38 +20,48 @@ def main():
     ap.add_argument("--policy", default="faillite",
                     choices=["faillite", "full-warm", "full-cold",
                              "full-warm-k"])
-    ap.add_argument("--observe", type=float, default=30.0)
+    ap.add_argument("--backend", default="testbed",
+                    choices=["sim", "testbed"])
+    ap.add_argument("--settle", type=float, default=20.0)
     args = ap.parse_args()
 
-    from repro.serving.testbed import MiniTestbed
-    print(f"deploying mini-testbed (policy={args.policy}) — real model "
-          f"loads, takes ~1 min on CPU...")
-    tb = MiniTestbed(apps_per_arch=1,
-                     archs=["qwen2.5-3b", "rwkv6-3b",
-                            "recurrentgemma-2b"],
-                     seed=1, headroom=0.3, policy=args.policy)
-    tb.deploy()
-    print(f"  apps: {[a.id for a in tb.apps]}")
-    print(f"  warm backups: "
-          f"{{k: v[1] for k, v in tb.controller.warm.items()}}")
+    from repro.experiment import (ExperimentSpec, primary_kill_scenario,
+                                  run_experiment)
+    spec = ExperimentSpec(
+        backend=args.backend, policy=args.policy, app_mix="arch",
+        archs=["qwen2.5-3b", "rwkv6-3b", "recurrentgemma-2b"],
+        n_sites=3, servers_per_site=2, headroom=0.3, seed=1,
+        client_hz=10.0, time_scale=0.25, settle_s=args.settle,
+        scenario="primary-kill",
+        scenario_builder=primary_kill_scenario())
+    if args.backend == "testbed":
+        print(f"deploying mini-testbed (policy={args.policy}) — real "
+              f"model loads, takes ~1 min on CPU...")
+    res = run_experiment(spec)
 
-    res = tb.run_failure_experiment(observe_s=args.observe, client_hz=10.0)
-    print(f"\nvictim: {res['victim']}  "
-          f"detected in {res['detect_latency_s']*1e3:.0f} ms")
-    s = res["summary"]
+    if math.isfinite(res.detect_latency_s):
+        print(f"\ndetected in {res.detect_latency_s*1e3:.0f} ms")
+    s = res.overall
     print(f"recovery: {s['recovery_rate']:.0%}  "
           f"MTTR {s['mttr_avg']*1e3:.0f} ms  "
           f"accuracy cost {s['accuracy_reduction']:.2%}")
-    for app_id, rec in res["records"].items():
-        print(f"  {app_id:28s} {rec.mode:17s} "
+    for rec in sorted(res.records, key=lambda r: r.app_id):
+        print(f"  {rec.app_id:28s} {rec.mode:17s} "
               f"{rec.mttr*1e3 if rec.recovered else float('nan'):8.0f} ms "
-              f"-> {rec.variant}")
+              f"-> {rec.upgraded_to or rec.variant}")
+
     print("\nclient view:")
-    for app_id, st in res["client_stats"].items():
+    t = res.traffic
+    print(f"  {t.n_offered} requests, availability {t.availability:.2%},"
+          f" dropped {t.n_dropped}, degraded {t.n_degraded}")
+    cli = (f"{t.client_mttr_avg*1e3:.0f} ms"
+           if math.isfinite(t.client_mttr_avg) else "inf")
+    print(f"  client-observed MTTR: {cli}   "
+          f"goodput {t.goodput:.4f}")
+    for app_id, st in sorted(res.extras.get("client_stats", {}).items()):
         down = f"{st.downtime*1e3:.0f} ms" if st.downtime else "none"
         print(f"  {app_id:28s} ok={st.ok:4d} failed={st.failed:4d} "
               f"downtime={down}")
-    tb.shutdown()
 
 
 if __name__ == "__main__":

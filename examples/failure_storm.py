@@ -1,15 +1,16 @@
-"""Failure storm: the scenario engine end-to-end.
+"""Failure storm: the scenario engine end-to-end, via the experiment API.
 
 Replays a rolling outage with rejoins, then a correlated cascade under
 workload churn, on the same 20-server cluster — showing per-epoch
 recovery, nodes rejoining empty and being re-filled, and the continuous
-re-protection loop restoring warm coverage between failure waves.
+re-protection loop restoring warm coverage between failure waves. Each
+run is one `ExperimentSpec`; add `backend="testbed"` to replay the same
+event streams against live workers.
 
     PYTHONPATH=src python examples/failure_storm.py
 """
 
-from repro.core.scenario import SCENARIOS, build_scenario
-from repro.core.simulation import SimConfig, Simulation
+from repro.experiment import ExperimentSpec, run_experiment
 
 
 def show(res):
@@ -26,15 +27,13 @@ def show(res):
 
 
 def main():
-    cfg = SimConfig(n_sites=4, servers_per_site=5, headroom=0.2,
-                    critical_frac=0.5, policy="faillite", seed=0)
     for name in ("rolling-with-rejoin", "cascade", "churn-under-failure"):
-        sim = Simulation(SimConfig(**cfg.__dict__)).setup()
-        scenario = build_scenario(name, sim.cluster, sim.apps,
-                                  seed=cfg.seed)
-        print(f"\n=== {name}: {scenario.description} "
-              f"({len(scenario.events)} events) ===")
-        show(sim.run_scenario(scenario))
+        spec = ExperimentSpec(scenario=name, n_sites=4,
+                              servers_per_site=5, headroom=0.2,
+                              critical_frac=0.5, policy="faillite",
+                              seed=0)
+        print(f"\n=== {name} ===")
+        show(run_experiment(spec))
 
 
 if __name__ == "__main__":

@@ -1,44 +1,40 @@
-"""Quickstart: FailLite in 60 seconds (discrete-event simulation).
+"""Quickstart: FailLite in 60 seconds (the experiment API, sim backend).
 
-Builds a 20-server / 2-site edge cluster, deploys a mixed app workload
-with heterogeneous variant ladders, injects a server crash, and prints
-the two-step failover in action — warm switches for critical apps,
-progressive small-first loads for the rest.
+One declarative `ExperimentSpec` describes the whole experiment: a
+20-server / 4-site edge cluster, a mixed app workload with heterogeneous
+variant ladders, and a crash of the server hosting the first app's
+primary. `run_experiment` executes it on the discrete-event simulator
+and returns the unified `RunResult` — swap `backend="testbed"` to run
+the same spec against live worker threads with real JAX engines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core.simulation import SimConfig, Simulation
+from repro.experiment import (ExperimentSpec, primary_kill_scenario,
+                              run_experiment)
 
 
 def main():
-    cfg = SimConfig(n_sites=4, servers_per_site=5, headroom=0.2,
-                    critical_frac=0.5, policy="faillite", seed=0)
-    sim = Simulation(cfg).setup()
-    print(f"cluster: {len(sim.cluster.servers)} servers, "
-          f"{len(sim.apps)} applications "
-          f"({sum(a.critical for a in sim.apps)} critical)")
-    print(f"warm backups planned: {len(sim.controller.warm)}")
+    spec = ExperimentSpec(n_sites=4, servers_per_site=5, headroom=0.2,
+                          critical_frac=0.5, policy="faillite", seed=0,
+                          scenario="primary-kill",
+                          scenario_builder=primary_kill_scenario())
+    res = run_experiment(spec)
 
-    victim = sim.controller.primaries[sim.apps[0].id]
-    n_primaries = sum(1 for i in
-                      sim.cluster.servers[victim].instances.values()
-                      if i.role == "primary" and i.app_id != "_reserved")
-    print(f"\ninjecting crash of {victim} "
-          f"({n_primaries} primaries affected)...")
-    res = sim.inject_failure(servers=[victim])
-
-    print(f"\nrecovery rate: {res.recovery_rate:.0%}   "
-          f"mean controller MTTR: {res.mttr_avg*1e3:.0f} ms   "
-          f"accuracy cost: {res.accuracy_reduction:.2%}")
-    for app_id, rec in sorted(res.records.items()):
+    o = res.overall
+    print(f"[{res.backend}] scenario={res.scenario} "
+          f"policy={res.policy}")
+    print(f"recovery rate: {o['recovery_rate']:.0%}   "
+          f"mean controller MTTR: {o['mttr_avg']*1e3:.0f} ms   "
+          f"accuracy cost: {o['accuracy_reduction']:.2%}")
+    for rec in sorted(res.records, key=lambda r: r.app_id):
         if rec.recovered:
             extra = (f" -> upgraded to {rec.upgraded_to}"
                      if rec.upgraded_to else "")
-            print(f"  {app_id:8s} {rec.mode:17s} {rec.mttr*1e3:7.1f} ms  "
-                  f"{rec.variant}{extra}")
+            print(f"  {rec.app_id:8s} {rec.mode:17s} "
+                  f"{rec.mttr*1e3:7.1f} ms  {rec.variant}{extra}")
         else:
-            print(f"  {app_id:8s} NOT RECOVERED")
+            print(f"  {rec.app_id:8s} NOT RECOVERED")
 
     # what the CLIENTS saw (request-level traffic plane, paper §5.7)
     t = res.traffic

@@ -45,6 +45,13 @@ class LoadExecutor:
         """Warm instance starts serving (instant)."""
         pass
 
+    def prepare_warm(self, app: Application, variant: Variant,
+                     server_id: str):
+        """A warm backup was planned onto `server_id`: materialize it on
+        the backend (no-op for the simulator, where warm means already
+        resident; a real background model load on the testbed)."""
+        pass
+
     def reset_server(self, server_id: str):
         """Server crashed or rejoined empty: drop its pending load queue."""
         pass
@@ -193,6 +200,7 @@ class FailLiteController:
         for app_id, (variant, sid) in assignment.items():
             key = self.cluster.place(app_id, variant, sid, "warm")
             self.warm[app_id] = (variant, sid, key)
+            self.executor.prepare_warm(self.apps[app_id], variant, sid)
             self.ds.put(f"warm/{app_id}", {"server": sid,
                                            "variant": variant.name})
         return assignment
@@ -555,12 +563,37 @@ class FailLiteController:
                 continue           # capacity raced away; retry next sweep
             self.warm[app_id] = (variant, sid, key)
             self.cold_protected.discard(app_id)
+            self.executor.prepare_warm(self.apps[app_id], variant, sid)
             self.ds.put(f"warm/{app_id}", {"server": sid,
                                            "variant": variant.name})
             placed[app_id] = (variant, sid)
         return placed
 
+    @property
+    def has_unrecovered(self) -> bool:
+        """Apps still down, awaiting the re-protection loop."""
+        return bool(self._unrecovered)
+
     # -- metrics -----------------------------------------------------------
+    def flat_records(self) -> List[RecoveryRecord]:
+        """Every epoch's records, flattened in epoch order."""
+        return [r for ep in self.epoch_records for r in ep.values()]
+
+    def overall_summary(self) -> Dict[str, float]:
+        """Summary over ALL epoch records (not just the latest per app)."""
+        flat = self.flat_records()
+        return self.summarize({i: r for i, r in enumerate(flat)})
+
+    def warm_coverage(self) -> float:
+        """Fraction of critical apps (with a live primary) that hold a
+        warm backup right now — the end-of-run protection view shared by
+        both execution backends."""
+        crit = [a for a in self.apps.values() if a.critical
+                and self.primaries.get(a.id) in self.cluster.servers
+                and self.cluster.servers[self.primaries[a.id]].alive]
+        return (sum(1 for a in crit if a.id in self.warm) / len(crit)
+                if crit else 1.0)
+
     def summarize(self, records=None) -> Dict[str, float]:
         recs = list((records or self.records).values())
         if not recs:

@@ -221,6 +221,9 @@ def aggregate(logs: List[AppLog], windows: List[DowntimeWindow],
         if l.served.any():
             lat_all.append(l.latency[l.served])
     lats = np.concatenate(lat_all) if lat_all else np.empty(0)
+    # the testbed leaves nan latencies on requests still in flight at
+    # run end; the sim path never produces them (no-op there)
+    lats = lats[np.isfinite(lats)]
 
     recovered = [w for w in windows if w.recovered]
     client_downs = [w.client_downtime for w in recovered]

@@ -441,19 +441,13 @@ class Simulation:
         self.events.run_until(t_end)
 
         ctl = self.controller
-        flat = [r for ep in ctl.epoch_records for r in ep.values()]
-        overall = ctl.summarize({i: r for i, r in enumerate(flat)})
-        crit = [a for a in ctl.apps.values() if a.critical
-                and ctl.primaries.get(a.id) in ctl.cluster.servers
-                and ctl.cluster.servers[ctl.primaries[a.id]].alive]
-        cov = (sum(1 for a in crit if a.id in ctl.warm) / len(crit)
-               if crit else 1.0)
+        flat = ctl.flat_records()
         return ScenarioResult(
             name=scenario.name,
             n_epochs=len(ctl.epoch_records),
             per_epoch=ctl.summarize_epochs(),
-            overall=overall,
-            warm_coverage=cov,
+            overall=ctl.overall_summary(),
+            warm_coverage=ctl.warm_coverage(),
             unplaced_arrivals=stats["unplaced_arrivals"],
             n_apps_final=len(ctl.apps),
             records=flat,

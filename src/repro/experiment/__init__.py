@@ -1,0 +1,29 @@
+"""repro.experiment — the repo's single public experiment API.
+
+    from repro.experiment import ExperimentSpec, run_experiment
+
+    res = run_experiment(ExperimentSpec(scenario="cascade", seed=1))
+    live = run_experiment(ExperimentSpec.smoke("testbed"))
+
+One declarative `ExperimentSpec` runs on either registered `Backend`
+("sim" = deterministic discrete-event simulator, "testbed" = live
+worker threads with real JAX engines) and always returns the unified
+`RunResult` schema. See docs/EXPERIMENTS.md.
+"""
+
+from repro.experiment.backends import (BACKENDS, Backend, SimBackend,
+                                       TestbedBackend, get_backend,
+                                       primary_kill_scenario,
+                                       register_backend, resolve_scenario,
+                                       run_experiment)
+from repro.experiment.result import RunResult
+from repro.experiment.spec import ExperimentSpec
+from repro.experiment.workload import (TESTBED_ARCHS, arch_mem_cap,
+                                       build_arch_apps, testbed_ladder)
+
+__all__ = [
+    "BACKENDS", "Backend", "ExperimentSpec", "RunResult", "SimBackend",
+    "TESTBED_ARCHS", "TestbedBackend", "arch_mem_cap", "build_arch_apps",
+    "get_backend", "primary_kill_scenario", "register_backend",
+    "resolve_scenario", "run_experiment", "testbed_ladder",
+]

@@ -1,0 +1,148 @@
+"""`python -m repro` / the `repro` console script.
+
+    repro run [--backend {sim,testbed}] [--scenario NAME] [--policy P]
+              [--seed N] [--smoke] [--json] [...cluster/traffic knobs]
+    repro list
+
+`run` builds an `ExperimentSpec` from the flags and executes it on the
+selected backend; `--smoke` loads the reduced CI preset for that backend
+(2x2 sim cluster / 2-server 2-app testbed) before applying explicit
+overrides. `list` prints the available scenarios, backends, policies,
+and planners.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import List, Optional
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    from repro.core.controller import POLICIES
+
+    ap = argparse.ArgumentParser(
+        prog="repro",
+        description="FailLite reproduction — one experiment API, "
+                    "two backends")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    from repro.experiment.backends import BACKENDS
+
+    run = sub.add_parser("run", help="run one experiment spec")
+    run.add_argument("--backend", default=None,
+                     choices=sorted(BACKENDS),
+                     help="execution engine (default: sim)")
+    run.add_argument("--scenario", default=None,
+                     help="named scenario (see `repro list`)")
+    run.add_argument("--policy", default=None, choices=POLICIES)
+    run.add_argument("--planner", default=None)
+    run.add_argument("--seed", type=int, default=None)
+    run.add_argument("--sites", type=int, default=None, dest="n_sites")
+    run.add_argument("--servers-per-site", type=int, default=None)
+    run.add_argument("--headroom", type=float, default=None)
+    run.add_argument("--critical-frac", type=float, default=None)
+    run.add_argument("--app-mix", default=None,
+                     choices=["synthetic", "arch"])
+    run.add_argument("--archs", default=None,
+                     help="comma-separated arch list (arch mix)")
+    run.add_argument("--apps-per-arch", type=int, default=None)
+    run.add_argument("--traffic-rate-scale", type=float, default=None)
+    run.add_argument("--client-hz", type=float, default=None)
+    run.add_argument("--settle", type=float, default=None,
+                     dest="settle_s")
+    run.add_argument("--time-scale", type=float, default=None)
+    run.add_argument("--smoke", action="store_true",
+                     help="reduced CI config for the chosen backend")
+    run.add_argument("--json", action="store_true", dest="as_json",
+                     help="emit the summary row as JSON")
+
+    sub.add_parser("list", help="show scenarios/backends/policies/planners")
+    return ap
+
+
+def _spec_from_args(args) -> "ExperimentSpec":
+    from repro.experiment.spec import ExperimentSpec
+
+    backend = args.backend or "sim"
+    spec = (ExperimentSpec.smoke(backend) if args.smoke
+            else ExperimentSpec(backend=backend))
+    overrides = {}
+    for attr in ("backend", "scenario", "policy", "planner", "seed",
+                 "n_sites", "servers_per_site", "headroom",
+                 "critical_frac", "app_mix", "apps_per_arch",
+                 "traffic_rate_scale", "client_hz", "settle_s",
+                 "time_scale"):
+        val = getattr(args, attr, None)
+        if val is not None:
+            overrides[attr] = val
+    if args.archs is not None:
+        overrides["archs"] = [a.strip() for a in args.archs.split(",")
+                              if a.strip()]
+        overrides.setdefault("app_mix", "arch")
+    return spec.with_(**overrides)
+
+
+def _print_result(res, as_json: bool):
+    row = res.to_row()
+    if as_json:
+        print(json.dumps(row, indent=1))
+        return
+    print(f"\n[{res.backend}] scenario={res.scenario} "
+          f"policy={res.policy} seed={res.seed}")
+    o = res.overall
+    mttr = (f"{o['mttr_avg']*1e3:.1f} ms"
+            if math.isfinite(o.get("mttr_avg", 0.0)) else "inf")
+    print(f"  control plane: {o['n']} affected over {res.n_epochs} "
+          f"epoch(s), recovery {o['recovery_rate']:.1%}, "
+          f"MTTR {mttr}, accuracy cost "
+          f"{o['accuracy_reduction']:.2%}")
+    if math.isfinite(res.detect_latency_s):
+        print(f"  detection latency: {res.detect_latency_s*1e3:.0f} ms")
+    t = res.traffic
+    if t is not None:
+        cli_mttr = (f"{t.client_mttr_avg*1e3:.1f} ms"
+                    if math.isfinite(t.client_mttr_avg) else "inf")
+        print(f"  request plane: {t.n_offered} offered, availability "
+              f"{t.availability:.4%}, client MTTR {cli_mttr}, "
+              f"goodput {t.goodput:.4f}, dropped {t.n_dropped}")
+    print(f"  warm coverage {res.warm_coverage:.0%}, planner "
+          f"{res.plan_wall_s*1e3:.1f} ms, run wall {res.wall_s:.1f} s")
+    for r in sorted(res.records, key=lambda r: (r.epoch, r.app_id)):
+        mt = f"{r.mttr*1e3:8.1f}" if math.isfinite(r.mttr) else "     inf"
+        print(f"    e{r.epoch} {r.app_id:24s} "
+              f"{'ok ' if r.recovered else 'DOWN'} {r.mode:17s} "
+              f"{mt} ms -> {r.upgraded_to or r.variant}")
+
+
+def _cmd_list():
+    from repro.core.controller import POLICIES
+    from repro.core.planner import available_planners
+    from repro.core.scenario import SCENARIOS
+    from repro.experiment.backends import BACKENDS
+
+    print("backends: ", ", ".join(sorted(BACKENDS)))
+    print("policies: ", ", ".join(POLICIES))
+    print("planners: ", ", ".join(sorted(available_planners())))
+    print("scenarios:")
+    for name in sorted(SCENARIOS):
+        print(f"  {name}")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = _build_parser().parse_args(argv)
+    if args.cmd == "list":
+        _cmd_list()
+        return 0
+    from repro.experiment.backends import run_experiment
+
+    spec = _spec_from_args(args)
+    res = run_experiment(spec)
+    _print_result(res, args.as_json)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

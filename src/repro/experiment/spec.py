@@ -1,0 +1,112 @@
+"""ExperimentSpec — the declarative entry point of the repo.
+
+One spec describes a complete resilience experiment independently of the
+engine that executes it: cluster shape, application mix, the failure
+scenario to replay, the protection policy and planner, the traffic
+configuration, and the seed. The `backend` field selects the execution
+engine — `"sim"` (discrete-event simulator, core/simulation.py) or
+`"testbed"` (live worker threads with real JAX engines on a wall clock,
+serving/testbed.py) — and the SAME spec runs on either: both backends
+replay the same `ScenarioEvent` stream and return the same `RunResult`
+schema (see experiment/result.py).
+
+App mixes:
+  * ``synthetic`` — profile-only variant ladders sized by the paper's
+    Small/Medium/Large family spread classes (simulator default; not
+    servable on the testbed because the variants carry no ModelConfig);
+  * ``arch`` — reduced smoke configs of real architectures
+    (`serving.testbed.TESTBED_ARCHS`): servable on the testbed AND
+    runnable in the simulator, which is what makes cross-backend parity
+    experiments possible (same apps, same cluster sizing rule, same
+    planner inputs on both engines).
+
+Specs are plain data: `to_dict()`/`from_dict()` round-trip every
+CLI-reachable field, so experiments can be stored/replayed as JSON. Two
+escape hatches exist for programmatic use only (both excluded from the
+dict form): `apps` pins an explicit Application list, and
+`scenario_builder` supplies a custom Scenario factory where the named
+library does not fit (e.g. "kill the server hosting app0's primary").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields, replace
+from typing import Callable, List, Optional, Sequence
+
+APP_MIXES = ("synthetic", "arch")
+
+
+@dataclass
+class ExperimentSpec:
+    # what to run
+    scenario: str = "single-server"     # named scenario (core/scenario.py)
+    backend: str = "sim"                # "sim" | "testbed"
+    policy: str = "faillite"
+    planner: Optional[str] = None       # registry name; None = policy default
+    alpha: float = 0.1
+    site_independence: bool = False
+    seed: int = 0
+    # cluster shape
+    n_sites: int = 4
+    servers_per_site: int = 5
+    server_mem: float = 16e9            # synthetic mix only (arch mix sizes
+                                        # capacity from the app set)
+    headroom: float = 0.2
+    critical_frac: float = 0.5
+    # app mix
+    app_mix: str = "synthetic"
+    archs: Optional[List[str]] = None   # arch mix: None = TESTBED_ARCHS
+    apps_per_arch: int = 1
+    # traffic plane
+    traffic_rate_scale: float = 20.0    # sim: requests/s per unit rate q_i
+    traffic_chunk_s: float = 0.5
+    client_hz: float = 10.0             # testbed: per-app client rate
+    # time control
+    settle_s: Optional[float] = None    # post-horizon settle; None = default
+    time_scale: float = 1.0             # testbed: event-time compression
+    # programmatic escape hatches (not serialized)
+    apps: Optional[Sequence] = field(default=None, repr=False)
+    scenario_builder: Optional[Callable] = field(default=None, repr=False)
+
+    _SKIP = ("apps", "scenario_builder")
+
+    def __post_init__(self):
+        if self.app_mix not in APP_MIXES:
+            raise ValueError(f"unknown app_mix {self.app_mix!r}; "
+                             f"have {APP_MIXES}")
+        if self.backend == "testbed" and self.app_mix == "synthetic" \
+                and self.apps is None:
+            # synthetic ladders carry no ModelConfig -> nothing to serve
+            self.app_mix = "arch"
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {f.name: getattr(self, f.name) for f in fields(self)
+                if f.name not in self._SKIP}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        known = {f.name for f in fields(cls)} - set(cls._SKIP)
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown ExperimentSpec fields: "
+                             f"{sorted(unknown)}")
+        return cls(**d)
+
+    def with_(self, **kw) -> "ExperimentSpec":
+        return replace(self, **kw)
+
+    # -- presets ------------------------------------------------------------
+    @classmethod
+    def smoke(cls, backend: str = "sim") -> "ExperimentSpec":
+        """CI smoke preset: smallest config that still exercises a full
+        deploy -> crash -> detect -> failover -> recover cycle."""
+        if backend == "testbed":
+            return cls(backend="testbed", scenario="single-server",
+                       app_mix="arch", archs=["qwen2.5-3b", "rwkv6-3b"],
+                       apps_per_arch=1, n_sites=2, servers_per_site=1,
+                       headroom=0.35, client_hz=20.0, time_scale=0.25,
+                       settle_s=12.0, seed=3)
+        return cls(backend=backend, scenario="single-server",
+                   n_sites=2, servers_per_site=2, headroom=0.3,
+                   traffic_rate_scale=5.0, settle_s=10.0, seed=0)

@@ -57,6 +57,20 @@ class WorkerServer:
         with self._lock:
             self.engines.clear()
 
+    def revive(self):
+        """Rejoin after a crash: the node returns EMPTY (engines were
+        lost) but its cold store (disk) survived; heartbeats resume."""
+        if self._alive.is_set():
+            return self
+        self._alive.set()
+        return self.start()
+
+    def join(self, timeout: float = 2.0):
+        """Wait for the worker's threads to exit (after kill()); keeps
+        JAX work out of interpreter teardown."""
+        for t in self._threads:
+            t.join(timeout=timeout)
+
     @property
     def alive(self) -> bool:
         return self._alive.is_set()

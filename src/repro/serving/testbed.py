@@ -9,45 +9,54 @@ Real components everywhere the paper's testbed had them:
     load time, Fig. 2b analogue)
   * clients measure end-to-end downtime around the failure
 
+This is the live execution engine behind the `testbed` backend of
+`repro.experiment`: `run_scenario()` replays the SAME `ScenarioEvent`
+stream the simulator replays — `ServerFail`/`SiteFail`/`ServerRejoin`/
+`AppArrival`/`AppDeparture`/`LoadSpike` — against worker threads on a
+wall clock. Controller route changes reach the serving `Router` and the
+request-level telemetry through the first-class `RoutingTable`
+observer/drop_observer hooks (no monkey-patching), and the real request
+outcomes measured by the client threads are folded through the same
+`core.metrics.aggregate` code the simulator's traffic plane uses, so
+client-observed MTTR/availability/goodput mean the same thing on both
+backends.
+
 Model ladders use the reduced smoke configs so everything runs on CPU;
-capacities are scaled so contention matches the paper's ~50% utilization
-+ configurable headroom.
+capacities come from the shared arch-mix sizing rule
+(`repro.experiment.workload`), which is what lets the simulator run the
+exact same workload on the exact same cluster shape for cross-backend
+parity experiments.
 """
 
 from __future__ import annotations
 
+import math
 import random
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
 
-from repro import configs
+import numpy as np
+
 from repro.core.cluster import Cluster, Server
 from repro.core.controller import (FailLiteController, LoadExecutor,
                                    RecoveryRecord)
 from repro.core.heartbeat import FailureDetector, WallClock
-from repro.core.variants import Application, Variant, build_ladder
-from repro.serving.engine import Request
+from repro.core.metrics import AppLog, DowntimeWindow, TrafficSummary, aggregate
+from repro.core.scenario import (AppArrival, AppDeparture, LoadSpike,
+                                 Scenario, ServerFail, ServerRejoin,
+                                 SiteFail)
+from repro.core.variants import Application
+from repro.experiment.workload import (ARCH_COMPUTE_CAP, TESTBED_ARCHS,
+                                       arch_mem_cap, build_arch_apps,
+                                       testbed_ladder)
 from repro.serving.router import Router
 from repro.serving.server import WorkerServer
 from repro.serving.workload import make_request
 
-TESTBED_ARCHS = ["qwen2.5-3b", "qwen3-32b", "recurrentgemma-2b",
-                 "rwkv6-3b", "qwen3-moe-30b-a3b"]
-
-
-def testbed_ladder(arch: str) -> List[Variant]:
-    """Variant ladder over an extra-reduced smoke config (CPU-budget:
-    load time is dominated by XLA compiles, the testbed's stand-in for
-    the paper's disk-bandwidth-dominated Triton loads)."""
-    smoke = configs.get_smoke(arch)
-    plen = len(smoke.block_pattern)
-    n_layers = plen if not smoke.is_encoder_decoder else 2
-    kw = dict(scan_layers=True, num_layers=n_layers)
-    if smoke.is_encoder_decoder:
-        kw.update(num_encoder_layers=1, num_decoder_layers=1)
-    return build_ladder(smoke.replace(**kw), cell_mem=64e6)
+DETECT_POLL_S = 0.02          # sweeper poll (controller sweep, §5.1)
+REPROTECT_EVERY_S = 1.0       # continuous re-protection loop period
 
 
 class TestbedExecutor(LoadExecutor):
@@ -55,74 +64,249 @@ class TestbedExecutor(LoadExecutor):
 
     Loads are serialized per server (one PCIe/disk channel per cell, as
     on the paper's testbed) and ordered: the progressive small-first load
-    completes before the selected-variant load starts.
+    completes before the selected-variant load starts. Controller
+    callbacks run under the testbed's controller lock, AFTER the server
+    channel is released (lock-ordering: never hold a server channel
+    while waiting for the controller).
     """
 
-    def __init__(self, workers: Dict[str, WorkerServer], router: Router):
+    def __init__(self, workers: Dict[str, WorkerServer], router: Router,
+                 ctl_lock: threading.RLock):
         self.workers = workers
         self.router = router
+        self.ctl_lock = ctl_lock
         self._locks: Dict[str, threading.Lock] = {
             sid: threading.Lock() for sid in workers}
+        self._threads: List[threading.Thread] = []
+        self._outstanding = 0
+        self._n_lock = threading.Lock()
+
+    def _spawn(self, fn) -> None:
+        with self._n_lock:
+            self._outstanding += 1
+
+        def run():
+            try:
+                fn()
+            finally:
+                with self._n_lock:
+                    self._outstanding -= 1
+
+        t = threading.Thread(target=run, daemon=True)
+        self._threads.append(t)
+        t.start()
+
+    def idle(self) -> bool:
+        with self._n_lock:
+            return self._outstanding == 0
 
     def load(self, app, variant, server_id, on_ready):
         def work():
             try:
                 with self._locks[server_id]:
                     self.workers[server_id].load(app, variant)
-                on_ready(time.monotonic())
             except RuntimeError:
-                pass                      # server died mid-load
+                return                    # server died mid-load
             except Exception:             # noqa: BLE001
                 import traceback
                 traceback.print_exc()
-        threading.Thread(target=work, daemon=True).start()
+                return
+            with self.ctl_lock:
+                on_ready(time.monotonic())
+        self._spawn(work)
 
     def activate(self, app, variant, server_id):
         w = self.workers[server_id]
         if not w.has(variant.name):        # warm = pre-loaded at plan time
             w.load(app, variant)
 
+    def prepare_warm(self, app, variant, server_id):
+        """Warm backup planned: load it in the background so a later
+        `activate` finds the engine resident."""
+        def work():
+            try:
+                with self._locks[server_id]:
+                    if not self.workers[server_id].has(variant.name):
+                        self.workers[server_id].load(app, variant)
+            except RuntimeError:
+                pass
+            except Exception:             # noqa: BLE001
+                import traceback
+                traceback.print_exc()
+        self._spawn(work)
+
+    def join(self, timeout: float = 15.0):
+        deadline = time.monotonic() + timeout
+        for t in self._threads:
+            t.join(timeout=max(0.0, deadline - time.monotonic()))
+
 
 @dataclass
 class ClientStats:
+    """Per-app client-side counters (compat view; the authoritative
+    request-level metrics are the shared `TrafficSummary`)."""
     app_id: str
     ok: int = 0
     failed: int = 0
     last_ok: Optional[float] = None
-    first_ok_after_gap: Optional[float] = None
     downtime: Optional[float] = None
+
+
+class TestbedTelemetry:
+    """Real request outcomes + route-transition windows, folded through
+    the SAME `core.metrics.aggregate` code as the simulator's traffic
+    plane — the testbed's half of the shared request-level metrics."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        # app_id -> list of (t, ok, accuracy, request-or-None)
+        self._attempts: Dict[str, list] = {}
+        self._full_acc: Dict[str, float] = {}
+        self._slo: Dict[str, float] = {}
+        self.windows: List[DowntimeWindow] = []
+        self._open: Dict[str, DowntimeWindow] = {}
+
+    # -- control-plane hooks (RoutingTable observers) -----------------------
+    def app_seen(self, app: Application):
+        with self._lock:
+            if app.id not in self._attempts:
+                self._attempts[app.id] = []
+                self._full_acc[app.id] = app.full.accuracy
+                self._slo[app.id] = app.latency_slo
+
+    def route_up(self, app_id: str, t: float):
+        """A route push reached the clients: close any open blackout."""
+        with self._lock:
+            w = self._open.pop(app_id, None)
+            if w is not None:
+                w.t_end = t
+                self.windows.append(w)
+
+    def mark_down(self, app_id: str, t: float, epoch: int):
+        """The app's serving replica just died (crash instant)."""
+        with self._lock:
+            if app_id in self._open or app_id not in self._attempts:
+                return
+            self._open[app_id] = DowntimeWindow(app_id=app_id, epoch=epoch,
+                                                t_start=t)
+
+    def mark_gone(self, app_id: str):
+        """App departed: an open blackout is censored (never recovered)."""
+        with self._lock:
+            w = self._open.pop(app_id, None)
+            if w is not None:
+                self.windows.append(w)
+
+    # -- data plane (client threads) ----------------------------------------
+    def record(self, app_id: str, t: float, ok: bool, accuracy: float,
+               req=None):
+        with self._lock:
+            self._attempts[app_id].append((t, ok, accuracy, req))
+
+    # -- aggregation --------------------------------------------------------
+    def summarize(self, t_end: float) -> TrafficSummary:
+        with self._lock:
+            attempts = {a: list(v) for a, v in self._attempts.items()}
+            windows = ([DowntimeWindow(w.app_id, w.epoch, w.t_start,
+                                       w.t_end)
+                        for w in self.windows]
+                       + [DowntimeWindow(w.app_id, w.epoch, w.t_start)
+                          for w in self._open.values()])
+        logs: List[AppLog] = []
+        for app_id in sorted(attempts):
+            rows = attempts[app_id]
+            n = len(rows)
+            arrivals = np.array([r[0] for r in rows], np.float64)
+            served = np.array([r[1] for r in rows], bool)
+            accuracy = np.array([r[2] if r[1] else math.nan
+                                 for r in rows], np.float64)
+            latency = np.array(
+                [(r[3].done_at - r[3].submitted_at)
+                 if (r[1] and r[3] is not None
+                     and r[3].done_at is not None) else math.nan
+                 for r in rows], np.float64)
+            # dropped = failed while inside a client-visible blackout
+            dropped = np.zeros(n, bool)
+            for w in windows:
+                if w.app_id != app_id:
+                    continue
+                hi = w.t_end if w.recovered else math.inf
+                dropped |= (~served & (arrivals >= w.t_start)
+                            & (arrivals < hi))
+            full_acc = self._full_acc[app_id]
+            slo = self._slo[app_id]
+            with np.errstate(invalid="ignore"):
+                degraded = served & (accuracy < full_acc - 1e-12)
+                slo_violated = served & (latency > slo)
+            logs.append(AppLog(
+                app_id, arrivals, served, dropped,
+                offered=np.ones(n, bool), degraded=degraded,
+                slo_violated=slo_violated, accuracy=accuracy,
+                latency=latency))
+        return aggregate(logs, windows, t_end)
+
+    def client_stats(self, windows: Optional[List[DowntimeWindow]] = None,
+                     ) -> Dict[str, ClientStats]:
+        """Per-app counters. Pass `TrafficSummary.windows` (back-filled
+        by `aggregate` with each window's first served request) so
+        `downtime` is the client-observed gap; the raw internal windows
+        only know the route-outage interval."""
+        if windows is None:
+            windows = self.windows
+        with self._lock:
+            out = {}
+            for app_id, rows in self._attempts.items():
+                st = ClientStats(app_id)
+                for t, ok, _acc, _req in rows:
+                    if ok:
+                        st.ok += 1
+                        st.last_ok = t
+                    else:
+                        st.failed += 1
+                downs = [w.client_downtime
+                         for w in windows if w.app_id == app_id
+                         and w.recovered
+                         and math.isfinite(w.client_downtime)]
+                st.downtime = max(downs) if downs else None
+                out[app_id] = st
+            return out
 
 
 class MiniTestbed:
     def __init__(self, *, n_sites: int = 3, servers_per_site: int = 2,
                  apps_per_arch: int = 1, critical_frac: float = 0.5,
                  headroom: float = 0.35, policy: str = "faillite",
-                 seed: int = 0, archs: Optional[List[str]] = None):
+                 planner: Optional[str] = None, alpha: float = 0.1,
+                 site_independence: bool = False, seed: int = 0,
+                 archs: Optional[List[str]] = None,
+                 apps: Optional[Sequence[Application]] = None):
         self.rng = random.Random(seed)
         self.clock = WallClock()
         self.detector = FailureDetector(self.clock, interval=0.020)
         self.router = Router()
+        self.telemetry = TestbedTelemetry()
+        self._ctl_lock = threading.RLock()
+        self._archs = list(archs or TESTBED_ARCHS)
 
-        # --- applications from reduced configs -------------------------
-        self.apps: List[Application] = []
-        i = 0
-        for arch in (archs or TESTBED_ARCHS):
-            for _ in range(apps_per_arch):
-                ladder = testbed_ladder(arch)
-                self.apps.append(Application(
-                    id=f"{arch}-app{i}", family=arch, variants=ladder,
-                    request_rate=self.rng.uniform(0.5, 2.0),
-                    critical=(self.rng.random() < critical_frac)))
-                i += 1
+        # --- applications: the shared arch-mix workload ------------------
+        if apps is not None:
+            self.apps: List[Application] = list(apps)
+            for app in self.apps:
+                if app.full.config is None:
+                    raise ValueError(
+                        f"testbed apps need real ModelConfigs; "
+                        f"{app.id} has a profile-only ladder")
+        else:
+            self.apps = build_arch_apps(
+                self._archs, apps_per_arch=apps_per_arch,
+                critical_frac=critical_frac, seed=seed)
 
-        # --- capacity scaled to primaries + headroom ---------------------
-        total_primary = sum(a.full.demand["mem"] for a in self.apps)
-        max_primary = max(a.full.demand["mem"] for a in self.apps)
+        # --- capacity: the shared sizing rule ----------------------------
         n_servers = n_sites * servers_per_site
-        mem_cap = max(total_primary / (n_servers * (1.0 - headroom) * 0.5),
-                      1.5 * max_primary)
+        mem_cap = arch_mem_cap(self.apps, n_servers, headroom)
         servers = [Server(id=f"s{si}-{sj}", site=f"site{si}",
-                          capacity={"mem": mem_cap, "compute": 1e9})
+                          capacity={"mem": mem_cap,
+                                    "compute": ARCH_COMPUTE_CAP})
                    for si in range(n_sites)
                    for sj in range(servers_per_site)]
         self.cluster = Cluster(servers)
@@ -131,116 +315,330 @@ class MiniTestbed:
         self.workers: Dict[str, WorkerServer] = {
             s.id: WorkerServer(s.id, self.detector).start()
             for s in servers}
-        self.executor = TestbedExecutor(self.workers, self.router)
+        self.executor = TestbedExecutor(self.workers, self.router,
+                                        self._ctl_lock)
         self.controller = FailLiteController(
             self.cluster, self.clock, self.executor, policy=policy,
-            detector=self.detector)
-        # controller routing -> real router pushes
-        orig_set = self.controller.routing.set
+            alpha=alpha, site_independence=site_independence,
+            planner=planner, detector=self.detector)
+        # controller routing -> serving router + telemetry, through the
+        # first-class RoutingTable observer hooks
+        self.controller.routing.observer = self._on_route_set
+        self.controller.routing.drop_observer = self._on_route_drop
 
-        def set_and_push(app_id, server_id, variant_name):
-            orig_set(app_id, server_id, variant_name)
-            self.router.set_route(app_id, server_id, variant_name)
-        self.controller.routing.set = set_and_push
+        # --- run-time state ----------------------------------------------
+        self._stop = threading.Event()
+        self._departed: set = set()
+        self._spike_factor: Dict[str, float] = {}
+        self._kill_times: Dict[str, float] = {}
+        self._injection_seq = 0
+        self._detect_latency: Optional[float] = None
+        self._client_threads: List[threading.Thread] = []
+        self._aux_threads: List[threading.Thread] = []
+        self._timers: List[threading.Timer] = []
+        self._arrival_i = 0
+
+    # -- routing observers (replace the old monkey-patch) -------------------
+    def _on_route_set(self, app_id: str, server_id: str,
+                      variant_name: str):
+        self.router.set_route(app_id, server_id, variant_name)
+        self.telemetry.route_up(app_id, time.monotonic())
+
+    def _on_route_drop(self, app_id: str):
+        self.router.drop_route(app_id)
+        self.telemetry.mark_gone(app_id)
 
     # -- deployment ---------------------------------------------------------
     def deploy(self):
         for app in self.apps:
-            sid = self.controller.deploy_primary(app)
+            self.telemetry.app_seen(app)
+            with self._ctl_lock:
+                sid = self.controller.deploy_primary(app)
             self.workers[sid].load(app, app.full)
-            self.router.set_route(app.id, sid, app.full.name)
             for w in self.workers.values():      # cold replicas everywhere
                 for v in app.variants:
                     w.stage_cold(app, v)
-        warm = self.controller.plan_warm_backups()
+        with self._ctl_lock:
+            warm = self.controller.plan_warm_backups()
+        # prepare_warm loads run in the background; wait for residency so
+        # the experiment starts from the paper's protected steady state
+        deadline = time.monotonic() + 120.0
         for app_id, (variant, sid) in warm.items():
-            app = next(a for a in self.apps if a.id == app_id)
-            self.workers[sid].load(app, variant)
+            while (not self.workers[sid].has(variant.name)
+                   and time.monotonic() < deadline):
+                time.sleep(0.05)
         return self
 
-    # -- failure experiment ---------------------------------------------------
+    # -- clients ------------------------------------------------------------
+    def _client_loop(self, app: Application, hz: float):
+        st_ok = 0
+        rng = random.Random(hash(app.id) & 0xffff)
+        while not self._stop.is_set() and app.id not in self._departed:
+            ok = False
+            acc = math.nan
+            req = None
+            try:
+                route = self.router.lookup(app.id)
+                if route:
+                    sid, vname = route
+                    w = self.workers.get(sid)
+                    if w and w.alive and w.has(vname):
+                        req = make_request(
+                            rng, f"{app.id}-r{st_ok}",
+                            app.variants[0].config.vocab_size)
+                        ok = w.submit(vname, req)
+                        if ok:
+                            acc = app.variant_by_name(vname).accuracy
+                            st_ok += 1
+            except Exception:                      # noqa: BLE001
+                ok = False
+            self.telemetry.record(app.id, time.monotonic(), ok, acc,
+                                  req if ok else None)
+            time.sleep(1.0 / (hz * self._spike_factor.get(app.id, 1.0)))
+
+    def _start_client(self, app: Application, hz: float):
+        t = threading.Thread(target=self._client_loop, args=(app, hz),
+                             daemon=True)
+        self._client_threads.append(t)
+        t.start()
+
+    # -- background control loops -------------------------------------------
+    def _sweeper_loop(self):
+        while not self._stop.is_set():
+            time.sleep(DETECT_POLL_S)
+            newly = self.detector.sweep()
+            # scheduling-noise suppression: multi-second XLA compiles
+            # hold the GIL and can starve a HEALTHY worker's heartbeat
+            # thread past the miss threshold. A real deployment has no
+            # such cross-server coupling, so spurious detections (the
+            # worker was never killed) are re-armed instead of declared.
+            for sid in [s for s in newly if self.workers[s].alive]:
+                self.detector.revive(sid)
+                newly.remove(sid)
+            if not newly:
+                continue
+            now = time.monotonic()
+            t_fail = min(self._kill_times.get(sid, now) for sid in newly)
+            if self._detect_latency is None:
+                self._detect_latency = now - t_fail
+            with self._ctl_lock:
+                self.controller.handle_failures(newly, t_fail)
+
+    def _reprotect_loop(self, every: float):
+        while not self._stop.wait(every):
+            with self._ctl_lock:
+                self.controller.reprotect()
+
+    # -- scenario event handlers ---------------------------------------------
+    def _fail_servers(self, sids: List[str]):
+        t_kill = time.monotonic()
+        epoch = self._injection_seq
+        self._injection_seq += 1
+        with self._ctl_lock:
+            routes = dict(self.controller.routing.routes)
+        for sid in sids:
+            self._kill_times[sid] = t_kill
+            self.workers[sid].kill()
+        # clients see the blackout from the crash instant, well before
+        # detection — same window semantics as the simulator
+        for app_id, (sid, _v) in routes.items():
+            if sid in sids:
+                self.telemetry.mark_down(app_id, t_kill, epoch)
+
+    def _rejoin(self, sid: str):
+        with self._ctl_lock:
+            if self.cluster.servers[sid].alive:
+                # rejoin raced ahead of detection: apply the failure
+                # first so bookkeeping stays consistent
+                self.controller.handle_failures(
+                    [sid], self._kill_times.get(sid, time.monotonic()))
+            self.workers[sid].revive()
+            self.controller.handle_rejoin(sid)
+        for app in self.apps:                    # disk content survived
+            for v in app.variants:
+                self.workers[sid].stage_cold(app, v)
+
+    def _adapt_arrival(self, app: Application) -> Application:
+        """Scenario arrivals carry synthetic (profile-only) ladders; the
+        testbed serves real models, so map the arrival onto a reduced
+        arch ladder, preserving id / rate / criticality / SLO."""
+        if app.full.config is not None:
+            return app
+        arch = self._archs[self._arrival_i % len(self._archs)]
+        self._arrival_i += 1
+        return Application(id=app.id, family=arch,
+                           variants=testbed_ladder(arch),
+                           request_rate=app.request_rate,
+                           latency_slo=app.latency_slo,
+                           critical=app.critical)
+
+    def _on_arrival(self, app: Application, stats: dict, hz: float):
+        app = self._adapt_arrival(app)
+        self.telemetry.app_seen(app)
+        with self._ctl_lock:
+            try:
+                sid = self.controller.deploy_primary(app)
+            except ValueError:
+                stats["unplaced_arrivals"] += 1
+                return
+        self.apps.append(app)
+        for w in self.workers.values():
+            for v in app.variants:
+                w.stage_cold(app, v)
+        # the primary engine loads in the background: clients fail until
+        # the (real) cold deploy completes — that is what arriving
+        # mid-outage costs
+        self.executor.load(app, app.full, sid, lambda t: None)
+        self._start_client(app, hz)
+
+    def _on_departure(self, app_id: str):
+        self._departed.add(app_id)
+        with self._ctl_lock:
+            self.controller.handle_departure(app_id)
+        self.apps = [a for a in self.apps if a.id != app_id]
+
+    def _on_spike(self, ev: LoadSpike, time_scale: float):
+        # multiplicative with save/restore, mirroring the simulator's
+        # handling so overlapping spikes compose identically
+        ids = (set(ev.app_ids) if ev.app_ids is not None
+               else {a.id for a in self.apps})
+        saved = {aid: self._spike_factor.get(aid, 1.0) for aid in ids}
+        for aid in ids:
+            self._spike_factor[aid] = saved[aid] * ev.factor
+
+        def restore():
+            for aid, f in saved.items():
+                self._spike_factor[aid] = f
+        timer = threading.Timer(ev.duration * time_scale, restore)
+        timer.daemon = True
+        self._timers.append(timer)
+        timer.start()
+
+    # -- scenario replay ------------------------------------------------------
+    def run_scenario(self, scenario: Scenario, *,
+                     time_scale: float = 1.0,
+                     settle_s: Optional[float] = None,
+                     client_hz: float = 10.0,
+                     reprotect_every: float = REPROTECT_EVERY_S) -> dict:
+        """Replay `scenario` on the wall clock (event times scaled by
+        `time_scale`); run until horizon + settle, exiting early once
+        every recovery and in-flight load has completed."""
+        scenario.validate(self.cluster)
+        settle = settle_s if settle_s is not None else 15.0
+        stats = {"unplaced_arrivals": 0}
+
+        for app in self.apps:
+            self._start_client(app, client_hz)
+        for target, args in ((self._sweeper_loop, ()),
+                             (self._reprotect_loop, (reprotect_every,))):
+            t = threading.Thread(target=target, args=args, daemon=True)
+            self._aux_threads.append(t)
+            t.start()
+
+        t0 = time.monotonic()
+        for ev in scenario.sorted_events():
+            delay = t0 + ev.t * time_scale - time.monotonic()
+            if delay > 0:
+                if self._stop.wait(delay):
+                    break
+            if isinstance(ev, ServerFail):
+                self._fail_servers([ev.server])
+            elif isinstance(ev, SiteFail):
+                self._fail_servers(list(self.cluster.sites[ev.site]))
+            elif isinstance(ev, ServerRejoin):
+                self._rejoin(ev.server)
+            elif isinstance(ev, AppArrival):
+                self._on_arrival(ev.app, stats, client_hz)
+            elif isinstance(ev, AppDeparture):
+                self._on_departure(ev.app_id)
+            elif isinstance(ev, LoadSpike):
+                self._on_spike(ev, time_scale)
+            else:
+                raise TypeError(f"unhandled scenario event: {ev}")
+
+        # observe until recovery converges (or the deadline passes)
+        deadline = t0 + scenario.horizon * time_scale + settle
+        grace = max(1.0, 3.0 / client_hz)
+        while time.monotonic() < deadline:
+            with self._ctl_lock:
+                recs = list(self.controller.records.values())
+                down = self.controller.has_unrecovered
+            if recs and not down and self.executor.idle() \
+                    and all(r.recovered for r in recs):
+                time.sleep(grace)       # let clients observe the routes
+                break
+            time.sleep(0.1)
+        t_end = time.monotonic()
+
+        self._stop.set()
+        for t in self._client_threads:
+            t.join(timeout=2.0)
+
+        ctl = self.controller
+        with self._ctl_lock:
+            flat = ctl.flat_records()
+            overall = ctl.overall_summary()
+            per_epoch = ctl.summarize_epochs()
+            cov = ctl.warm_coverage()
+        traffic = self.telemetry.summarize(t_end)
+        return {
+            "n_epochs": len(ctl.epoch_records),
+            "per_epoch": per_epoch,
+            "overall": overall,
+            "warm_coverage": cov,
+            "unplaced_arrivals": stats["unplaced_arrivals"],
+            "records": flat,
+            "traffic": traffic,
+            "detect_latency_s": (self._detect_latency
+                                 if self._detect_latency is not None
+                                 else math.nan),
+            # the summary's windows carry the back-filled
+            # t_first_served, so per-app downtime is the true
+            # client-observed gap, not just the route outage
+            "client_stats": self.telemetry.client_stats(traffic.windows),
+        }
+
+    # -- compat: the paper's base experiment ----------------------------------
     def run_failure_experiment(self, victim: Optional[str] = None, *,
                                settle_s: float = 0.3,
                                observe_s: float = 6.0,
-                               client_hz: float = 20.0):
-        """Kill one server; measure recovery via detector + clients."""
+                               client_hz: float = 20.0) -> dict:
+        """Kill one (primary-hosting) server; measure recovery via the
+        detector + live clients. Thin wrapper over `run_scenario`."""
         victim = victim or next(
-            sid for sid, w in self.workers.items()
+            sid for sid, srv in self.cluster.servers.items()
             if any(i.role == "primary"
-                   for i in self.cluster.servers[sid].instances.values()))
-
-        stats = {a.id: ClientStats(a.id) for a in self.apps}
-        stop = threading.Event()
-
-        def client_loop(app: Application):
-            st = stats[app.id]
-            period = 1.0 / client_hz
-            rng = random.Random(hash(app.id) & 0xffff)
-            while not stop.is_set():
-                ok = False
-                try:
-                    route = self.router.lookup(app.id)
-                    if route:
-                        sid, vname = route
-                        w = self.workers.get(sid)
-                        if w and w.alive and w.has(vname):
-                            req = make_request(
-                                rng, f"{app.id}-r{st.ok}",
-                                app.variants[0].config.vocab_size)
-                            ok = w.submit(vname, req)
-                except Exception:                      # noqa: BLE001
-                    import traceback
-                    traceback.print_exc()
-                now = time.monotonic()
-                if ok:
-                    if (st.last_ok is not None and st.downtime is None
-                            and now - st.last_ok > 4 * period):
-                        st.downtime = now - st.last_ok
-                    st.ok += 1
-                    st.last_ok = now
-                else:
-                    st.failed += 1
-                time.sleep(period)
-
-        threads = [threading.Thread(target=client_loop, args=(a,),
-                                    daemon=True) for a in self.apps]
-        for t in threads:
-            t.start()
-        time.sleep(settle_s)
-
-        # --- inject crash ------------------------------------------------
-        t_fail = time.monotonic()
-        self.workers[victim].kill()
-
-        # --- detection loop (controller sweep every 100ms) ----------------
-        detected: List[str] = []
-        t_deadline = t_fail + observe_s
-        while time.monotonic() < t_deadline and not detected:
-            time.sleep(0.01)
-            detected = self.detector.sweep()
-        t_detect = time.monotonic()
-        records: Dict[str, RecoveryRecord] = {}
-        if detected:
-            records = self.controller.handle_failures(detected, t_fail)
-        # wait for progressive loads (engine compiles are real work)
-        deadline = time.monotonic() + observe_s
-        while time.monotonic() < deadline:
-            if all(r.recovered for r in records.values()) and records:
-                time.sleep(0.5)     # let clients observe the new route
-                break
-            time.sleep(0.05)
-        stop.set()
-        for t in threads:
-            t.join(timeout=1.0)
-
+                   for i in srv.instances.values()))
+        scenario = Scenario(
+            name="primary-kill",
+            events=[ServerFail(t=settle_s, server=victim)],
+            horizon=settle_s,
+            description=f"kill {victim}, observe recovery")
+        out = self.run_scenario(scenario, settle_s=observe_s,
+                                client_hz=client_hz)
+        records: Dict[str, RecoveryRecord] = (
+            dict(self.controller.epoch_records[0])
+            if self.controller.epoch_records else {})
         return {
             "victim": victim,
-            "detect_latency_s": t_detect - t_fail,
+            "detect_latency_s": out["detect_latency_s"],
             "records": records,
             "summary": self.controller.summarize(records),
-            "client_stats": stats,
+            "client_stats": out["client_stats"],
+            "traffic": out["traffic"],
         }
 
     def shutdown(self):
+        """Stop every thread this testbed started and JOIN it, so no
+        JAX work survives into interpreter teardown (the old abort-at-
+        exit came from daemon threads compiling during shutdown)."""
+        self._stop.set()
+        for timer in self._timers:
+            timer.cancel()
+        for t in self._client_threads + self._aux_threads:
+            t.join(timeout=2.0)
+        self.executor.join(timeout=20.0)
         for w in self.workers.values():
             w.kill()
+        for w in self.workers.values():
+            w.join(timeout=2.0)

@@ -1,0 +1,165 @@
+"""Experiment API: spec round-trip, backend registry, sim-path
+equivalence with the legacy entry point, CLI, and (slow) cross-backend
+parity — the same spec must make the same failover choices on the
+simulator and on the live thread testbed."""
+
+import json
+import math
+
+import pytest
+
+from repro.experiment import (BACKENDS, ExperimentSpec, RunResult,
+                              get_backend, primary_kill_scenario,
+                              run_experiment)
+
+TINY = dict(n_sites=2, servers_per_site=2, headroom=0.3,
+            traffic_rate_scale=5.0, settle_s=10.0, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# spec + registry
+# ---------------------------------------------------------------------------
+
+def test_spec_roundtrip():
+    spec = ExperimentSpec(scenario="cascade", policy="full-warm",
+                          seed=7, n_sites=3, archs=["qwen2.5-3b"],
+                          app_mix="arch")
+    again = ExperimentSpec.from_dict(spec.to_dict())
+    assert again == spec
+    assert json.loads(json.dumps(spec.to_dict())) == spec.to_dict()
+
+
+def test_spec_rejects_unknown_fields_and_mixes():
+    with pytest.raises(ValueError):
+        ExperimentSpec.from_dict({"no_such_field": 1})
+    with pytest.raises(ValueError):
+        ExperimentSpec(app_mix="bogus")
+
+
+def test_spec_testbed_forces_arch_mix():
+    # synthetic ladders carry no ModelConfig -> not servable
+    assert ExperimentSpec(backend="testbed").app_mix == "arch"
+    assert ExperimentSpec(backend="sim").app_mix == "synthetic"
+
+
+def test_backend_registry():
+    assert {"sim", "testbed"} <= set(BACKENDS)
+    assert get_backend("sim").name == "sim"
+    with pytest.raises(KeyError):
+        get_backend("quantum")
+
+
+# ---------------------------------------------------------------------------
+# sim backend
+# ---------------------------------------------------------------------------
+
+def test_sim_run_result_schema():
+    res = run_experiment(ExperimentSpec(scenario="single-server", **TINY))
+    assert isinstance(res, RunResult)
+    assert res.backend == "sim"
+    assert res.n_epochs >= 1
+    assert res.overall["recovery_rate"] == 1.0
+    assert res.traffic is not None and res.traffic.n_offered > 0
+    assert res.plan_wall_s > 0.0
+    assert math.isnan(res.detect_latency_s)     # sim models detection
+    by_app = res.recovery_by_app()
+    assert by_app and all(len(v) == 3 for v in by_app.values())
+    assert set(res.to_row()) >= {"backend", "scenario", "recovery_rate",
+                                 "client_mttr_ms", "availability"}
+
+
+def test_sim_path_identical_to_legacy_entry_point():
+    """The API wrapper must not perturb the deterministic sim path:
+    same fingerprint as driving Simulation directly."""
+    from repro.core.simulation import SimConfig, Simulation
+
+    res = run_experiment(ExperimentSpec(scenario="site-outage", **TINY))
+    sim = Simulation(SimConfig(n_sites=2, servers_per_site=2,
+                               headroom=0.3, traffic_rate_scale=5.0,
+                               seed=0)).setup()
+    legacy = sim.run_named_scenario("site-outage", settle=10.0)
+    assert res.fingerprint() == legacy.fingerprint()
+
+
+def test_scenario_builder_hook():
+    res = run_experiment(ExperimentSpec(
+        scenario="primary-kill",
+        scenario_builder=primary_kill_scenario(), **TINY))
+    assert res.scenario == "primary-kill"
+    # the victim hosted app0's primary, so app0 must appear
+    assert any(r.app_id == "app0" for r in res.records)
+
+
+def test_arch_mix_runs_on_sim():
+    res = run_experiment(ExperimentSpec(
+        scenario="single-server", app_mix="arch",
+        archs=["qwen2.5-3b", "rwkv6-3b"], n_sites=2, servers_per_site=1,
+        headroom=0.35, traffic_rate_scale=5.0, settle_s=10.0, seed=3))
+    assert res.overall["recovery_rate"] == 1.0
+    # arch ladders really were used
+    fams = {r.variant.split(":")[0] for r in res.records}
+    assert fams <= {"qwen2.5-3b", "rwkv6-3b"}
+
+
+def test_fingerprint_raises_on_non_deterministic_backend():
+    res = run_experiment(ExperimentSpec(scenario="single-server", **TINY))
+    res.sim_result = None                 # simulate a testbed result
+    with pytest.raises(ValueError):
+        res.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_list(capsys):
+    from repro.experiment.cli import main
+    assert main(["list"]) == 0
+    out = capsys.readouterr().out
+    assert "sim" in out and "testbed" in out and "single-server" in out
+
+
+def test_cli_run_smoke_json(capsys):
+    from repro.experiment.cli import main
+    assert main(["run", "--smoke", "--backend", "sim", "--json"]) == 0
+    row = json.loads(capsys.readouterr().out)
+    assert row["backend"] == "sim"
+    assert row["recovery_rate"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# testbed backend (slow: real JAX engines)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_testbed_rejects_profile_only_apps():
+    from repro.core.variants import Application, synthetic_family
+    from repro.serving.testbed import MiniTestbed
+    ladder = synthetic_family("x", 1e9)
+    with pytest.raises(ValueError):
+        MiniTestbed(apps=[Application(id="x0", family="x",
+                                      variants=ladder)])
+
+
+@pytest.mark.slow
+def test_cross_backend_parity():
+    """Same spec, same scenario, same seed -> the same failover variant
+    choices on both backends (wall-clock MTTRs may differ)."""
+    spec = ExperimentSpec(
+        backend="testbed", scenario="single-server", app_mix="arch",
+        archs=["qwen2.5-3b", "rwkv6-3b", "recurrentgemma-2b"],
+        n_sites=3, servers_per_site=2, headroom=0.35, client_hz=20.0,
+        time_scale=0.25, settle_s=25.0, seed=1)
+    sim = run_experiment(spec.with_(backend="sim"))
+    tb = run_experiment(spec)
+
+    assert sim.recovery_by_app() == tb.recovery_by_app()
+    assert tb.overall["recovery_rate"] == 1.0
+    # unified schema: both sides expose the same summary keys
+    assert set(sim.to_row()) == set(tb.to_row())
+    # real detection + real client-observed downtime on the testbed
+    assert 0.0 < tb.detect_latency_s < 1.0
+    t = tb.traffic
+    assert t.n_windows >= 1
+    assert t.n_offered > 0
+    assert math.isfinite(t.client_mttr_avg) and t.client_mttr_avg > 0.0
