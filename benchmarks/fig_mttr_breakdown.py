@@ -1,0 +1,87 @@
+"""MTTR breakdown — where recovery time actually goes once model-state
+is explicit (beyond-paper companion to Fig. 5/7).
+
+Replays `cold-load-storm` (site outage + degraded cloud uplink) on the
+"edge" storage preset and decomposes every cold recovery's MTTR into
+the model-state plane's phases:
+
+    detect   crash -> detector declares the failure
+    plan     planner wall time for the failover round
+    queue    waited behind other transfers on the fetch-path links
+    fetch    checkpoint byte-transfer (local disk / peer NIC / cloud)
+    warmup   per-instance compile/alloc
+    route    client push notification
+
+across the policy matrix (protection policy x placement planner x
+recovery scheduler). The queue column is the storm's signature: FIFO +
+locality-blind placement piles transfers onto the shared uplink, while
+the criticality scheduler + locality planner drain restores from local
+disks first. `tools/bench_mttr.py` is the JSON/CI twin of this figure.
+"""
+
+from __future__ import annotations
+
+CELLS = [
+    ("faillite", None, "fifo"),
+    ("faillite", None, "criticality"),
+    ("faillite", "locality", "fifo"),
+    ("faillite", "locality", "criticality"),
+    ("full-cold", None, "fifo"),
+]
+PHASES = ("detect", "plan", "queue", "fetch", "warmup", "route")
+
+
+def run(quick: bool = True):
+    import math
+
+    import numpy as np
+
+    from repro.experiment import ExperimentSpec, run_experiment
+
+    seeds = [0] if quick else [0, 1, 2]
+    shape = (dict(n_sites=3, servers_per_site=4) if quick
+             else dict(n_sites=4, servers_per_site=5))
+    print("# fig_mttr_breakdown: policy,planner,scheduler,n_cold,"
+          + ",".join(f"{p}_ms" for p in PHASES)
+          + ",ctl_mttr_ms,client_p99_ms")
+    rows = []
+    for policy, planner, scheduler in CELLS:
+        records, downs = [], []
+        for seed in seeds:
+            res = run_experiment(ExperimentSpec(
+                scenario="cold-load-storm", storage="edge",
+                policy=policy, planner=planner, scheduler=scheduler,
+                seed=seed, headroom=0.2, **shape))
+            records += list(res.records)
+            downs += [w.client_downtime for w in res.traffic.windows
+                      if w.recovered
+                      and math.isfinite(w.client_downtime)]
+        recovered = [r for r in records if r.recovered]
+        cold = [r for r in recovered
+                if r.mode.startswith("cold") and r.phases]
+        means = {ph: (1e3 * sum(r.phases.get(ph, 0.0) for r in cold)
+                      / max(len(cold), 1)) for ph in PHASES}
+        ctl = 1e3 * sum(r.mttr for r in recovered) \
+            / max(len(recovered), 1)
+        p99 = (float(np.percentile(downs, 99)) * 1e3
+               if downs else float("nan"))
+        rows.append((policy, planner or "greedy", scheduler,
+                     len(cold), means, ctl, p99))
+        print(f"fig_mttr_breakdown,{policy},{planner or 'greedy'},"
+              f"{scheduler},{len(cold)},"
+              + ",".join(f"{means[p]:.1f}" for p in PHASES)
+              + f",{ctl:.1f},{p99:.1f}", flush=True)
+
+    # human-readable stacked view
+    print("\npolicy/planner/scheduler        "
+          + "".join(f"{p:>9s}" for p in PHASES) + "      ctl      p99")
+    for policy, planner, scheduler, n, means, ctl, p99 in rows:
+        label = f"{policy}/{planner}/{scheduler}"
+        print(f"{label:32s}"
+              + "".join(f"{means[p]:8.1f}m" for p in PHASES)
+              + f"{ctl:8.1f}m{p99:8.1f}m")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

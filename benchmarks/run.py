@@ -22,6 +22,7 @@ MODULES = [
     "fig10_families",
     "fig11_sites",
     "fig12_scalability",
+    "fig_mttr_breakdown",
     "ilp_vs_heuristic",
     "scenarios",
     "kernels_bench",

@@ -54,9 +54,17 @@ class Server:
 
 
 class Cluster:
-    """Servers grouped into sites; tracks placement + liveness."""
+    """Servers grouped into sites; tracks placement + liveness.
 
-    def __init__(self, servers: List[Server]):
+    `storage` is the cluster's storage topology (per-server disk+NIC
+    bandwidth, shared cloud uplink, checkpoint replication policy — a
+    `core.modelstate.StorageConfig`); None means the default
+    local-everything topology, under which model loading reduces to the
+    historical flat ``bytes / LOAD_BW + warmup`` cost.
+    """
+
+    def __init__(self, servers: List[Server], storage=None):
+        self.storage = storage
         self.servers: Dict[str, Server] = {s.id: s for s in servers}
         self.sites: Dict[str, List[str]] = {}
         for s in servers:

@@ -5,7 +5,16 @@ Workflow (paper Fig. 4):
   (2) agents load models per policy
   (3) heartbeat failure detection -> progressive failover (Algorithm 1)
   (4) progressive loading: smallest variant first, hot-swap to selected
+      — dispatched through the RecoveryScheduler drain queue ("fifo" =
+      historical order; "criticality" = restore-before-upgrade,
+      critical apps first, preemptive)
   (5) clients re-routed via routing-epoch push
+
+The model-state plane (core/modelstate.py) threads through: the
+controller seeds checkpoint replicas at deploy, records each
+recovery's MTTR phase breakdown from the executor's LoadTickets, and
+proactively re-replicates under-protected checkpoints in idle
+re-protection rounds.
 
 The same controller frame runs the paper's three baselines
 (Full-Size-Warm / -Cold / -Warm(K)) via `policy=`, and runs against
@@ -15,6 +24,7 @@ the LoadExecutor interface.
 
 from __future__ import annotations
 
+import itertools
 import math
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set, Tuple
@@ -22,10 +32,12 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 from repro.core.cluster import Cluster, Instance, RESOURCES
 from repro.core.datastore import DataStore
 from repro.core.heartbeat import Clock, FailureDetector
+from repro.core.modelstate import ModelRegistry
 from repro.core.planner import PlanRequest, PlannerState, get_planner
 from repro.core.variants import Application, Variant
 
 POLICIES = ("faillite", "full-warm", "full-cold", "full-warm-k")
+SCHEDULERS = ("fifo", "criticality")
 
 NOTIFY_OVERHEAD_S = 0.010      # client push notification (paper §5.7)
 
@@ -52,6 +64,15 @@ class LoadExecutor:
         resident; a real background model load on the testbed)."""
         pass
 
+    def replicate(self, app: Application, variant: Variant,
+                  server_id: str, on_done: Optional[Callable] = None):
+        """Background checkpoint copy onto `server_id`'s disk (no HBM
+        residency) — the re-protection loop's proactive re-replication.
+        Backends with a ModelRegistry stage the bytes when the transfer
+        completes; the base class is a no-op."""
+        if on_done is not None:
+            on_done(0.0)
+
     def reset_server(self, server_id: str):
         """Server crashed or rejoined empty: drop its pending load queue."""
         pass
@@ -68,6 +89,13 @@ class RecoveryRecord:
     upgraded_to: Optional[str] = None
     epoch: int = 0                # failure epoch this record belongs to
     t_fail: float = 0.0
+    # MTTR phase decomposition (seconds): detect / plan / queue / fetch /
+    # warmup / route, plus the fetch source ("local"|"peer"|"cloud").
+    # Filled on recovery when the backend reports a LoadTicket;
+    # benchmarks/fig_mttr_breakdown.py aggregates it. NOT part of the
+    # scenario fingerprint.
+    phases: Dict[str, float] = field(default_factory=dict)
+    source: Optional[str] = None
 
 
 @dataclass
@@ -98,6 +126,130 @@ class RoutingTable:
                 self.drop_observer(app_id)
 
 
+@dataclass
+class _PendingLoad:
+    """One queued recovery load awaiting dispatch."""
+    prio: tuple                    # (stage, not critical, -rate, seq)
+    app: Application
+    variant: Variant
+    server_id: str
+    on_ready: Callable[[float], None]
+    ticket: object = None          # LoadTicket once dispatched
+    t_submit: Optional[float] = None
+
+
+class RecoveryScheduler:
+    """Explicit recovery-drain scheduler in front of the LoadExecutor.
+
+    Progressive failover used to be an ordering convention: loads were
+    handed to the executor in whatever order the affected apps were
+    discovered, and the executor's per-server FIFO implicitly decided
+    who recovered first. This class makes the policy explicit:
+
+      * ``fifo`` — dispatch immediately in submission order; the
+        executor's per-link FIFO queues serialize. This is bit-exactly
+        the historical behavior (and the default).
+      * ``criticality`` — hold a per-target-server drain queue with at
+        most ONE in-flight load per server; the queue drains in
+        (restore-before-upgrade, critical first, then request-rate)
+        order, so a higher-criticality app failing MID-DRAIN preempts
+        (jumps ahead of) every queued lower-criticality load, and no
+        progressive UPGRADE transfer delays another app's first
+        RESTORE transfer. Loads across different servers overlap
+        freely; per-link I/O is still serialized by the executor's
+        queues.
+
+    Queued loads targeting a server that dies are dropped
+    (`reset_server`); the superseding failure epoch re-plans them.
+    """
+
+    def __init__(self, executor: LoadExecutor, mode: str = "fifo",
+                 alive_fn: Optional[Callable[[str], bool]] = None,
+                 clock: Optional[Clock] = None):
+        assert mode in SCHEDULERS, mode
+        self.executor = executor
+        self.mode = mode
+        self.alive_fn = alive_fn or (lambda sid: True)
+        self.clock = clock         # for drain-wait phase accounting
+        self._seq = itertools.count()
+        self._queued: Dict[str, List[_PendingLoad]] = {}
+        self._inflight: Dict[str, _PendingLoad] = {}
+
+    def priority(self, app: Application, stage: int = 0) -> tuple:
+        return (stage, not app.critical, -app.request_rate,
+                next(self._seq))
+
+    def submit(self, app: Application, variant: Variant, server_id: str,
+               on_ready: Callable[[float], None], *,
+               stage: int = 0) -> _PendingLoad:
+        """Enqueue one recovery load; returns its pending handle (the
+        handle's `.ticket` holds the executor's LoadTicket once the
+        load is dispatched). `stage` 0 = restore (an app comes back
+        serving), 1 = progressive upgrade (quality, not availability) —
+        upgrades never delay restores in criticality mode."""
+        item = _PendingLoad(self.priority(app, stage), app, variant,
+                            server_id, on_ready)
+        if self.mode == "fifo":
+            item.ticket = self.executor.load(app, variant, server_id,
+                                             on_ready)
+            return item
+        if self.clock is not None:
+            item.t_submit = self.clock.now()
+        self._queued.setdefault(server_id, []).append(item)
+        if server_id not in self._inflight:
+            self._dispatch(server_id)
+        return item
+
+    def _dispatch(self, sid: str):
+        q = self._queued.get(sid)
+        if not q:
+            self._queued.pop(sid, None)
+            return
+        if not self.alive_fn(sid):
+            del self._queued[sid]          # superseded by a newer epoch
+            return
+        q.sort(key=lambda it: it.prio)     # stable: seq breaks ties
+        item = q.pop(0)
+        if not q:
+            del self._queued[sid]
+        self._inflight[sid] = item
+
+        def _done(t_ready: float):
+            mine = self._inflight.get(sid) is item
+            if mine:
+                del self._inflight[sid]
+            try:
+                item.on_ready(t_ready)
+            finally:
+                if mine:
+                    self._dispatch(sid)
+
+        item.ticket = self.executor.load(item.app, item.variant, sid,
+                                         _done)
+        if (item.ticket is not None and self.clock is not None
+                and item.t_submit is not None):
+            # time spent held in THIS drain queue is queueing too —
+            # fold it into the ticket so phases still sum to MTTR
+            item.ticket.queue_s += self.clock.now() - item.t_submit
+
+    def reset_server(self, server_id: str):
+        """Server crashed/rejoined: drop its queue and in-flight marker
+        (stale completions are ignored via identity checks)."""
+        self._queued.pop(server_id, None)
+        self._inflight.pop(server_id, None)
+
+    def idle(self) -> bool:
+        """No queued or in-flight recovery loads (fifo mode keeps no
+        state here, so it is always 'idle' — the executor's own queues
+        carry the work)."""
+        return not self._queued and not self._inflight
+
+    @property
+    def n_pending(self) -> int:
+        return (sum(len(q) for q in self._queued.values())
+                + len(self._inflight))
+
+
 class FailLiteController:
     def __init__(self, cluster: Cluster, clock: Clock,
                  executor: LoadExecutor, *,
@@ -107,11 +259,24 @@ class FailLiteController:
                  use_ilp: bool = False,
                  planner: Optional[str] = None,
                  detector: Optional[FailureDetector] = None,
-                 datastore: Optional[DataStore] = None):
+                 datastore: Optional[DataStore] = None,
+                 registry: Optional[ModelRegistry] = None,
+                 scheduler: str = "fifo"):
         assert policy in POLICIES, policy
         self.cluster = cluster
         self.clock = clock
         self.executor = executor
+        # model-state plane: checkpoint residency + fetch-path selection
+        # (None = no registry, i.e. the historical local-everything
+        # assumption; the execution backends normally provide one)
+        self.registry = registry
+        # recovery-drain scheduler: "fifo" (historical dispatch order)
+        # or "criticality" (priority drain queue with preemption)
+        self.scheduler = RecoveryScheduler(
+            executor, mode=scheduler,
+            alive_fn=lambda sid: (sid in cluster.servers
+                                  and cluster.servers[sid].alive),
+            clock=clock)
         self.policy = policy
         self.alpha = alpha if policy == "faillite" else 0.0
         self.site_independence = site_independence
@@ -127,7 +292,11 @@ class FailLiteController:
         # persistent array-backed capacity view; Cluster notifies it of
         # per-server deltas, so planning never rebuilds a view per call
         self.state = PlannerState(cluster)
+        if registry is not None:
+            self.state.attach_registry(registry)
         self.plan_wall_s = 0.0       # cumulative planner time (all calls)
+        self._last_plan_wall = 0.0   # wall of the latest planning round
+        self._replicating: Set[tuple] = set()   # (variant, target) in flight
         self.detector = detector or FailureDetector(clock)
         self.ds = datastore or DataStore()
         self.apps: Dict[str, Application] = {}
@@ -170,6 +339,9 @@ class FailLiteController:
         # register only after placement succeeded: a rejected arrival
         # must not leak into controller state
         self.apps[app.id] = app
+        if self.registry is not None:
+            # seed the app's checkpoint replicas (primary disk + spread)
+            self.registry.ensure_app(app, server_id)
         self.primaries[app.id] = server_id
         self.routing.set(app.id, server_id, app.full.name)
         self.ds.put(f"primary/{app.id}", {"server": server_id,
@@ -216,7 +388,8 @@ class FailLiteController:
             primaries=self.primaries, alpha=alpha,
             site_independence=self.site_independence,
             now=self.clock.now()))
-        self.plan_wall_s += getattr(res, "wall_s", 0.0)
+        self._last_plan_wall = getattr(res, "wall_s", 0.0)
+        self.plan_wall_s += self._last_plan_wall
         return res.assignment
 
     def _fullsize_assign(self, cands):
@@ -271,6 +444,10 @@ class FailLiteController:
             # the warm-backup reconciliation below
             failed_set = {sid for sid in failed_servers
                           if not self.cluster.servers[sid].alive}
+        for sid in failed_set:
+            # queued recovery loads onto a dead server are void; their
+            # apps are re-planned by this epoch or the reprotect loop
+            self.scheduler.reset_server(sid)
 
         # Apps hit by this epoch: lost their serving primary OR an
         # in-flight recovery load (role "loading" from a prior epoch).
@@ -307,8 +484,11 @@ class FailLiteController:
                 del self.warm[app.id]
                 self.routing.set(app.id, sid, v.name)
                 mttr = (t_detect - t_fail) + NOTIFY_OVERHEAD_S
-                records[app.id] = RecoveryRecord(
+                rec = RecoveryRecord(
                     app.id, True, mttr, v.name, v.accuracy, "warm")
+                rec.phases = {"detect": t_detect - t_fail,
+                              "route": NOTIFY_OVERHEAD_S}
+                records[app.id] = rec
             else:
                 cold_apps.append(app)
 
@@ -419,6 +599,7 @@ class FailLiteController:
         # Loads scheduled now are void if a later epoch kills the target
         # server (gen bumped) or the app departs; callbacks check both.
         gen = self._gen.get(app.id, 0)
+        plan_s = self._last_plan_wall
 
         def _stale() -> bool:
             return (self._gen.get(app.id, 0) != gen
@@ -436,6 +617,14 @@ class FailLiteController:
             rec.variant = first.name
             rec.accuracy = first.accuracy
             rec.mode = "cold-progressive" if progressive else "cold"
+            rec.phases = {"detect": t_detect - t_fail, "plan": plan_s,
+                          "route": NOTIFY_OVERHEAD_S}
+            ticket = handle.ticket
+            if ticket is not None:
+                rec.source = ticket.source
+                rec.phases.update(queue=ticket.queue_s,
+                                  fetch=ticket.fetch_s,
+                                  warmup=ticket.warmup_s)
             if not progressive:
                 inst = self.cluster.servers[sid].instances.get(key_sel)
                 if inst is not None:
@@ -456,9 +645,10 @@ class FailLiteController:
             rec.accuracy = v_sel.accuracy
             rec.upgraded_to = v_sel.name
 
-        self.executor.load(app, first, sid, on_first_ready)
+        handle = self.scheduler.submit(app, first, sid, on_first_ready)
         if progressive:
-            self.executor.load(app, v_sel, sid, on_selected_ready)
+            self.scheduler.submit(app, v_sel, sid, on_selected_ready,
+                                  stage=1)
         return rec
 
     # ------------------------------------------------------------------
@@ -474,6 +664,7 @@ class FailLiteController:
         self.cluster.revive_server(server_id)
         self.detector.revive(server_id)
         self.executor.reset_server(server_id)
+        self.scheduler.reset_server(server_id)
         # defensive scrub: nothing should still point at a node that was
         # down, but repeated epochs make invariants worth re-asserting
         for app_id in [a for a, s in self.primaries.items()
@@ -488,7 +679,13 @@ class FailLiteController:
     def handle_departure(self, app_id: str):
         """App leaves: release every replica and forget its bookkeeping."""
         self._bump(app_id)
-        self.apps.pop(app_id, None)
+        app = self.apps.pop(app_id, None)
+        if self.registry is not None and app is not None:
+            # arch-mix siblings share variant names: keep checkpoints
+            # any surviving app still depends on
+            in_use = {v.name for a in self.apps.values()
+                      for v in a.variants}
+            self.registry.forget_app(app, in_use=in_use)
         self.cluster.remove_app(app_id)
         self.primaries.pop(app_id, None)
         if app_id in self.warm:
@@ -510,7 +707,47 @@ class FailLiteController:
     def reprotect(self) -> Dict[str, int]:
         retried = self._retry_unrecovered()
         replanned = self.replan_lost_backups()
-        return {"retried": retried, "replanned": len(replanned)}
+        replicated = self._replicate_underprotected()
+        return {"retried": retried, "replanned": len(replanned),
+                "replicated": replicated}
+
+    def _replicate_underprotected(self, max_per_round: int = 2) -> int:
+        """Idle-round proactive checkpoint re-replication: when the
+        recovery drain queue is empty, copy the progressive-entry
+        (smallest) variant of under-replicated apps onto fresh disks,
+        critical/high-rate apps first — so the NEXT failure finds a
+        nearby copy instead of paying the cloud uplink. A no-op under
+        the default local-everything storage. "Idle" means no app is
+        still awaiting recovery, the drain queue is empty, AND the
+        executor reports no in-flight work (fifo mode keeps no
+        scheduler state, so the executor's own view catches loads
+        still streaming) — replication bytes must never delay recovery
+        bytes on a shared link."""
+        if (self.registry is None or self.registry.storage.replicate_all
+                or self._unrecovered or not self.scheduler.idle()
+                or not getattr(self.executor, "idle", lambda: True)()):
+            return 0
+        cands = sorted(self.apps.values(),
+                       key=lambda a: (not a.critical, -a.request_rate,
+                                      a.id))
+        n = 0
+        for app, v, _copies in self.registry.under_replicated(cands):
+            if any(k[0] == v.name for k in self._replicating):
+                continue                     # a copy is already in flight
+            target = self.registry.replication_target(v.name)
+            if target is None:
+                continue
+            key = (v.name, target)
+            self._replicating.add(key)
+
+            def _done(_t, key=key):
+                self._replicating.discard(key)
+
+            self.executor.replicate(app, v, target, _done)
+            n += 1
+            if n >= max_per_round:
+                break
+        return n
 
     def _retry_unrecovered(self) -> int:
         down = [(aid, tf, ep) for aid, (tf, ep) in self._unrecovered.items()

@@ -10,8 +10,8 @@ Public surface (see docs/PLANNER.md):
   * `faillite_heuristic` (vectorized Algorithm 1), `plan_greedy`,
     `solve_warm_placement` (Eq. 1-7 B&B), and the legacy oracle.
 
-`core/heuristic.py` and `core/placement.py` are thin compatibility
-shims re-exporting from here.
+This package IS the placement API — the old `core/heuristic.py` /
+`core/placement.py` compat shims are gone; import from here.
 """
 
 from repro.core.planner.base import (HeuristicResult, PlanRequest,

@@ -4,6 +4,9 @@
     legacy-greedy  the original loop implementation (oracle/baseline)
     ilp            exact B&B over Eq. 1-7 (proactive-only: realtime=False)
     load-aware     worst-fit ranked by rate-weighted compute headroom
+    locality       worst-fit with checkpoint-locality tie-breaking
+                   (model-state plane: prefer servers that can fetch
+                   the failover variant fastest — local ≫ peer ≫ cloud)
 
 Select by name: `get_planner("greedy")`, or through the controller /
 simulator via `FailLiteController(planner="load-aware")` /
@@ -105,5 +108,53 @@ class LoadAwarePlanner(Planner):
                            score_fn=score)
 
 
+@register_planner("locality")
+class LocalityPlanner(Planner):
+    """Worst-fit with checkpoint-locality tie-breaking (model-state
+    plane, `core/modelstate.py`).
+
+    Algorithm 1's worst-fit ranks servers by normalized free fraction;
+    under a constrained storage topology that rule happily places a
+    failover onto a server that must stream the checkpoint over the
+    shared cloud uplink while an equally-roomy server holds the bytes
+    on local disk. This policy quantizes the headroom rank into bands
+    of `band` (so "equally roomy" means within one band, not bit-equal
+    floats) and, inside a band, prefers the server with the SMALLEST
+    uncontended fetch time for the candidate variant — local hit ≫
+    same-site peer ≫ cloud. Feasibility (Eq. 2/3/4/6) is unchanged.
+
+    Needs a `ModelRegistry` attached to the planner state
+    (`PlannerState.attach_registry`); without one it degrades to plain
+    vectorized Algorithm 1.
+    """
+
+    realtime = True
+
+    def __init__(self, band: float = 0.05):
+        self.band = band
+
+    def plan(self, req: PlanRequest) -> PlanResult:
+        exclude, site_exclude = req.exclusions()
+        registry = getattr(req.state, "registry", None) \
+            if req.state is not None else None
+        if registry is None:
+            return plan_greedy(req.apps, req.cluster, state=req.state,
+                               exclude=exclude, site_exclude=site_exclude,
+                               alpha=req.alpha, latency_fn=req.latency_fn)
+        band = self.band
+
+        def score(free, cap, d, app):
+            return np.floor((free / cap).min(axis=1) / band)
+
+        def tiebreak(app, variant, server_ids):
+            return [registry.fetch_seconds(variant, sid)
+                    for sid in server_ids]
+
+        return plan_greedy(req.apps, req.cluster, state=req.state,
+                           exclude=exclude, site_exclude=site_exclude,
+                           alpha=req.alpha, latency_fn=req.latency_fn,
+                           score_fn=score, tiebreak_fn=tiebreak)
+
+
 __all__ = ["GreedyPlanner", "LegacyGreedyPlanner", "IlpPlanner",
-           "LoadAwarePlanner"]
+           "LoadAwarePlanner", "LocalityPlanner"]

@@ -48,6 +48,10 @@ class PlannerState:
 
     def __init__(self, cluster: Cluster, *, subscribe: bool = True):
         self.cluster = cluster
+        # model-state plane attachment (checkpoint residency columns):
+        # locality-aware policies read per-server residency and fetch
+        # costs through this; None = no registry attached
+        self.registry = None
         self._rebuild()
         if subscribe:
             cluster.subscribe(self._on_change)
@@ -147,6 +151,25 @@ class PlannerState:
 
     def scratch(self, reserve_frac: float = 0.0) -> "ScratchView":
         return ScratchView(self, reserve_frac=reserve_frac)
+
+    # -- model-state columns -------------------------------------------------
+    def attach_registry(self, registry) -> None:
+        """Attach a `core.modelstate.ModelRegistry` so locality-aware
+        policies can read checkpoint residency per server (the
+        `locality` planner's tie-break reads `registry.fetch_seconds`
+        through this attachment)."""
+        self.registry = registry
+
+    def residency_mask(self, variant_name: str) -> np.ndarray:
+        """(S,) bool column — True where the server holds the variant's
+        checkpoint on local disk."""
+        assert self.registry is not None, "no ModelRegistry attached"
+        mask = np.zeros(len(self.server_ids), dtype=bool)
+        for sid in self.registry.resident_servers(variant_name):
+            i = self.sidx.get(sid)
+            if i is not None:
+                mask[i] = True
+        return mask
 
 
 class ScratchView:

@@ -50,13 +50,19 @@ def plan_greedy(apps: List[Application], cluster: Optional[Cluster] = None,
                 site_exclude: Optional[Dict[str, Set[str]]] = None,
                 alpha: float = 0.0,
                 latency_fn=None,
-                score_fn=None) -> HeuristicResult:
+                score_fn=None,
+                tiebreak_fn=None) -> HeuristicResult:
     """Vectorized Algorithm 1 over a (persistent or throwaway)
     `PlannerState`.
 
     `score_fn(free, cap, demand, app) -> (S,)` customizes the worst-fit
     ranking (used by the load-aware policy); None means the paper's
-    normalized-headroom rule.
+    normalized-headroom rule. `tiebreak_fn(app, variant, server_ids) ->
+    array` supplies a secondary key (lower = better, first-minimum on
+    equal keys) applied among servers whose primary rank ties exactly —
+    the locality policy ranks quantized headroom and tie-breaks on
+    checkpoint fetch time. None (the default) keeps argmax's
+    first-maximum rule, i.e. the legacy bit-exact behavior.
     """
     t0 = time.time()
     exclude = exclude or {}
@@ -156,7 +162,16 @@ def plan_greedy(apps: List[Application], cluster: Optional[Cluster] = None,
                 rank = headroom
             else:
                 rank = score_fn(free, cap, d, app)
-            k = int(np.argmax(np.where(feas, rank, -np.inf)))
+            masked = np.where(feas, rank, -np.inf)
+            k = int(np.argmax(masked))
+            if tiebreak_fn is not None:
+                ties = np.flatnonzero(masked == masked[k])
+                if ties.size > 1:
+                    tb = np.asarray(
+                        tiebreak_fn(app, app.variants[j],
+                                    [ids[int(t)] for t in ties]),
+                        dtype=np.float64)
+                    k = int(ties[int(np.argmin(tb))])
             free[k] -= d
             budget -= d
             headroom[k] = (free[k] / cap[k]).min()

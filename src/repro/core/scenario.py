@@ -13,11 +13,16 @@ Event types:
     ServerRejoin               failed node returns (empty, gets refilled)
     AppArrival / AppDeparture  workload churn
     LoadSpike                  temporary request-rate multiplier
+    LinkDegrade                temporary bandwidth cut on a storage link
+                               ("cloud", "nic:<sid>", or "disk:<sid>")
 
 Named library (`SCENARIOS`): single-server, site-outage, cascade,
-rolling-with-rejoin, churn-under-failure, flaky-node. Generators
-(`cascade_failures`, `rolling_failures`, `flaky_server`) compose into
-custom scenarios.
+rolling-with-rejoin, churn-under-failure, flaky-node, plus
+cold-load-storm (a site outage under a degraded cloud uplink — the
+model-state plane's worst case: every surviving server cold-loads at
+once and the fetch paths contend; pair it with the "edge" storage
+preset). Generators (`cascade_failures`, `rolling_failures`,
+`flaky_server`) compose into custom scenarios.
 
 Every scenario replay is also measured at the *request* level: while the
 events above drive the control plane, the simulator's traffic plane
@@ -86,6 +91,16 @@ class LoadSpike(ScenarioEvent):
     app_ids: Optional[Tuple[str, ...]] = None     # None = every app
 
 
+@dataclass(frozen=True)
+class LinkDegrade(ScenarioEvent):
+    """Cut a storage link's bandwidth to `factor`x for `duration`
+    seconds. `link` uses the model-state plane's link names
+    (core/modelstate.py): "cloud", "nic:<server>", "disk:<server>"."""
+    link: str = "cloud"
+    factor: float = 0.5
+    duration: float = 10.0
+
+
 FAILURE_EVENTS = (ServerFail, SiteFail)
 
 
@@ -114,6 +129,16 @@ class Scenario:
                 raise ValueError(f"unknown server in {e}")
             if isinstance(e, SiteFail) and e.site not in cluster.sites:
                 raise ValueError(f"unknown site in {e}")
+            if isinstance(e, LinkDegrade):
+                if e.factor <= 0:
+                    raise ValueError(f"non-positive degrade factor: {e}")
+                if ":" in e.link:
+                    kind, sid = e.link.split(":", 1)
+                    if kind not in ("disk", "nic") \
+                            or sid not in cluster.servers:
+                        raise ValueError(f"unknown link in {e}")
+                elif e.link != "cloud":
+                    raise ValueError(f"unknown link in {e}")
 
 
 # ---------------------------------------------------------------------------
@@ -281,6 +306,27 @@ def _flaky_node(cluster, apps, rng) -> Scenario:
                     "must not double-count repeated failures")
 
 
+def _cold_load_storm(cluster, apps, rng) -> Scenario:
+    """The model-state plane's stress case: a whole site goes dark while
+    the cloud uplink is degraded, so every affected app cold-loads at
+    once and the fetch paths (peer NICs, shared uplink) contend. With
+    the default local-everything storage this degenerates into a plain
+    site outage; run it with the "edge" storage preset to see the
+    contention (tools/bench_mttr.py does exactly that)."""
+    site = rng.choice(sorted(cluster.sites))
+    events: List[ScenarioEvent] = [
+        SiteFail(t=1.0, site=site),
+        LinkDegrade(t=1.0, link="cloud", factor=0.5, duration=30.0),
+    ]
+    return Scenario(
+        name="cold-load-storm",
+        events=events,
+        horizon=45.0,
+        description="site outage under a degraded cloud uplink: a storm "
+                    "of simultaneous cold loads contending for fetch "
+                    "bandwidth")
+
+
 ScenarioBuilder = Callable[[Cluster, Sequence[Application],
                             random.Random], Scenario]
 
@@ -291,6 +337,7 @@ SCENARIOS: Dict[str, ScenarioBuilder] = {
     "rolling-with-rejoin": _rolling_with_rejoin,
     "churn-under-failure": _churn_under_failure,
     "flaky-node": _flaky_node,
+    "cold-load-storm": _cold_load_storm,
 }
 
 

@@ -3,8 +3,11 @@ apps, model profiles + MTTR constants taken from the testbed).
 
 Events: failure injections, detector sweeps, model-load completions, and
 *traffic chunks*. The simulator provides the SimClock + SimLoadExecutor
-the controller runs against; per-server load queues serialize cold loads
-on a cell (disk/PCIe contention, as on the real testbed).
+the controller runs against; per-LINK FIFO queues (disk/PCIe channel,
+NIC, shared cloud uplink — the model-state plane, core/modelstate.py)
+serialize transfers along each cold load's fetch path, which with the
+default local-everything storage reduces to the historical per-server
+serialization.
 
 Request-event model: client requests are not individual heap events.
 Every `traffic_chunk_s` of sim time a chunk event (interleaved with
@@ -39,12 +42,16 @@ from repro.core.cluster import Cluster, make_cluster
 from repro.core.controller import FailLiteController, LoadExecutor
 from repro.core.heartbeat import FailureDetector, SimClock
 from repro.core.metrics import TrafficSummary
-from repro.core.scenario import (AppArrival, AppDeparture, LoadSpike,
-                                 Scenario, ScenarioEvent, ServerFail,
-                                 ServerRejoin, SiteFail, build_scenario)
+from repro.core.modelstate import (CLOUD_LINK, LOCAL, LinkScale,
+                                   LoadTicket, ModelRegistry, disk_link,
+                                   nic_link, storage_preset)
+from repro.core.scenario import (AppArrival, AppDeparture, LinkDegrade,
+                                 LoadSpike, Scenario, ScenarioEvent,
+                                 ServerFail, ServerRejoin, SiteFail,
+                                 build_scenario)
 from repro.core.traffic import TrafficConfig, TrafficPlane
 from repro.core.variants import (Application, Variant, build_ladder,
-                                 synthetic_family, LOAD_BW)
+                                 synthetic_family, LOAD_BW, WARMUP_S)
 
 DETECT_SWEEP_S = 0.100        # controller sweep period (paper §5.1)
 HEARTBEAT_S = 0.020
@@ -72,25 +79,149 @@ class EventQueue:
 
 
 class SimLoadExecutor(LoadExecutor):
-    """Load times = bytes/bandwidth + warmup; serialized per server."""
+    """Contention-aware load engine: per-link FIFO queues + fetch-path
+    selection through the `ModelRegistry` (local ≫ peer ≫ cloud).
 
-    def __init__(self, events: EventQueue, bw: float = LOAD_BW):
+    A transfer serializes on EVERY link of its fetch path: it starts
+    when the latest of its links frees up and occupies each of them
+    until it completes — so N simultaneous cold loads through the one
+    shared cloud uplink drain back-to-back (the Nth pays N-1 transfer
+    times of queueing), while loads on disjoint links overlap freely.
+    `LinkDegrade` scenario events scale a link's bandwidth for a
+    window; costs are priced through the registry's `LoadCostModel`,
+    so a testbed-measured calibration applies here too.
+
+    With the default local-everything storage every load is a single
+    local disk hit, which reduces bit-exactly to the historical model:
+    serialized per server at `bw`, each load costing
+    ``bytes / bw + warmup``.
+    """
+
+    def __init__(self, events: EventQueue, bw: float = LOAD_BW,
+                 registry: Optional[ModelRegistry] = None):
         self.events = events
-        self.bw = bw
-        self.busy_until: Dict[str, float] = {}
+        self.bw = bw                       # registry-less fallback
+        self.registry = registry
+        self.busy_until: Dict[str, float] = {}    # link -> free time
+        self._scales = LinkScale()                # LinkDegrade windows
+        # bumped by reset_server: transfers severed by a crash must not
+        # stage phantom checkpoint residency when their event fires
+        self._reset_gen: Dict[str, int] = {}
 
-    def load(self, app, variant, server_id, on_ready):
+    # -- link model ----------------------------------------------------------
+    def _base_bw(self, link: str) -> float:
+        if self.registry is None:
+            return self.bw
+        st = self.registry.storage
+        if link == CLOUD_LINK:
+            return st.cloud_bw
+        if link.startswith("disk:"):
+            return st.disk_bw
+        return st.nic_bw
+
+    def degrade_link(self, link: str, factor: float, duration: float):
+        """Scale `link`'s bandwidth by `factor` for `duration` sim
+        seconds (multiplicative, so overlapping windows compose)."""
+        self.events.after(duration, self._scales.degrade(link, factor))
+
+    def _path(self, variant, server_id):
+        """(links, bottleneck_bw, warmup_s, source) for one load."""
+        if self.registry is not None:
+            plan = self.registry.fetch_plan(variant.name, server_id)
+            links = plan.links
+            bw = min(self._base_bw(l) for l in links)
+            bw = self.registry.calibration.effective_bw(plan.source, bw)
+            warm = self.registry.storage.warmup_s
+            source = plan.source
+        else:
+            links = (disk_link(server_id),)
+            bw, warm, source = self.bw, WARMUP_S, LOCAL
+        return links, bw * self._scales.min_over(links), warm, source
+
+    def _occupy(self, links, now: float, duration: float):
+        """FIFO-claim every link of a fetch path: the transfer starts
+        when the latest link frees up and occupies all of them until it
+        completes. Returns (start, done)."""
+        start = max(now, max(self.busy_until.get(l, now) for l in links))
+        done = start + duration
+        for l in links:
+            self.busy_until[l] = done
+        return start, done
+
+    def idle(self) -> bool:
+        """No transfer in flight on any link at the current sim time."""
         now = self.events.clock.now()
-        start = max(now, self.busy_until.get(server_id, now))
-        done = start + variant.load_time(self.bw)
-        self.busy_until[server_id] = done
-        self.events.at(done, lambda: on_ready(done))
+        return all(t <= now for t in self.busy_until.values())
+
+    # -- LoadExecutor --------------------------------------------------------
+    def load(self, app, variant, server_id, on_ready) -> LoadTicket:
+        now = self.events.clock.now()
+        links, bw, warm, source = self._path(variant, server_id)
+        fetch = variant.mem_bytes / bw
+        start, done = self._occupy(links, now, fetch + warm)
+        ticket = LoadTicket(source=source, queue_s=start - now,
+                            fetch_s=fetch, warmup_s=warm)
+        gen = self._reset_gen.get(server_id, 0)
+
+        def fire():
+            ticket.done = True
+            if (self.registry is not None
+                    and self._reset_gen.get(server_id, 0) == gen):
+                # the fetched bytes are now on this server's disk;
+                # severed transfers (server crashed mid-stream) must
+                # not claim residency
+                self.registry.stage(variant.name, server_id)
+            on_ready(done)
+
+        self.events.at(done, fire)
+        return ticket
 
     def activate(self, app, variant, server_id):
         pass  # warm: already resident
 
+    def prepare_warm(self, app, variant, server_id):
+        """Proactive warm placement ships the checkpoint bytes along
+        (background, not MTTR-critical — modeled as instant)."""
+        if self.registry is not None:
+            self.registry.stage(variant.name, server_id)
+
+    def replicate(self, app, variant, server_id, on_done=None):
+        """Background checkpoint copy onto `server_id`'s disk: occupies
+        the fetch-path links (no warmup — nothing is compiled), then
+        stages residency."""
+        now = self.events.clock.now()
+        if self.registry is None:
+            if on_done is not None:
+                on_done(now)
+            return
+        plan = self.registry.fetch_plan(variant.name, server_id)
+        if plan.source == LOCAL:
+            if on_done is not None:
+                on_done(now)
+            return
+        links = plan.links
+        bw = min(self._base_bw(l) for l in links) \
+            * self._scales.min_over(links)
+        _start, done = self._occupy(links, now, variant.mem_bytes / bw)
+        gen = self._reset_gen.get(server_id, 0)
+
+        def fire():
+            if self._reset_gen.get(server_id, 0) == gen:
+                self.registry.stage(variant.name, server_id)
+            if on_done is not None:
+                on_done(done)
+
+        self.events.at(done, fire)
+
     def reset_server(self, server_id):
-        """Crash/rejoin wipes the per-server load queue."""
+        """Crash/rejoin wipes the server's own link queues (disk + NIC)
+        and severs its in-flight transfers (they will not stage
+        residency); shared links keep their backlog."""
+        self._reset_gen[server_id] = \
+            self._reset_gen.get(server_id, 0) + 1
+        self.busy_until.pop(disk_link(server_id), None)
+        self.busy_until.pop(nic_link(server_id), None)
+        # registry-less fallback keyed the queue by bare server id
         self.busy_until.pop(server_id, None)
 
 
@@ -112,13 +243,27 @@ class SimConfig:
     site_independence: bool = False
     use_ilp: bool = False
     # placement policy by registry name (docs/PLANNER.md): "greedy",
-    # "ilp", "load-aware", "legacy-greedy"; None = use_ilp-derived default
+    # "ilp", "load-aware", "legacy-greedy", "locality"; None =
+    # use_ilp-derived default
     planner: Optional[str] = None
     seed: int = 0
     # request-level traffic plane: requests/s generated per unit app
     # rate q_i (0 disables the plane) and the bulk-generation window
     traffic_rate_scale: float = 20.0
     traffic_chunk_s: float = 0.5
+    # model-state plane (core/modelstate.py): storage preset by name
+    # ("local" = every checkpoint on every disk, the exact historical
+    # behavior; "edge" = paper-faithful constrained topology), the
+    # Fig. 2b load-cost constants (previously the module-level
+    # LOAD_BW/WARMUP_S), optional per-preset bandwidth overrides, and
+    # the recovery-drain scheduler ("fifo" | "criticality")
+    storage: str = "local"
+    load_bw: float = LOAD_BW       # bytes/s disk->HBM (Fig. 2b slope)
+    warmup_s: float = WARMUP_S     # per-instance compile/alloc warmup
+    nic_bw: Optional[float] = None
+    cloud_bw: Optional[float] = None
+    replication: Optional[int] = None
+    scheduler: str = "fifo"
 
 
 def synthetic_apps(cfg: SimConfig, rng: random.Random,
@@ -213,13 +358,21 @@ class Simulation:
         self.cluster = make_cluster(cfg.n_sites, cfg.servers_per_site,
                                     mem=cfg.server_mem,
                                     compute=cfg.server_compute)
-        self.executor = SimLoadExecutor(self.events)
+        # model-state plane: storage topology + checkpoint registry
+        self.cluster.storage = storage_preset(
+            cfg.storage, disk_bw=cfg.load_bw, warmup_s=cfg.warmup_s,
+            nic_bw=cfg.nic_bw, cloud_bw=cfg.cloud_bw,
+            replication=cfg.replication)
+        self.registry = ModelRegistry(self.cluster, self.cluster.storage)
+        self.executor = SimLoadExecutor(self.events, bw=cfg.load_bw,
+                                        registry=self.registry)
         self.detector = FailureDetector(self.clock, interval=HEARTBEAT_S)
         self.controller = FailLiteController(
             self.cluster, self.clock, self.executor,
             policy=cfg.policy, alpha=cfg.alpha,
             site_independence=cfg.site_independence, use_ilp=cfg.use_ilp,
-            planner=cfg.planner, detector=self.detector)
+            planner=cfg.planner, detector=self.detector,
+            registry=self.registry, scheduler=cfg.scheduler)
         self.apps = apps if apps is not None else synthetic_apps(
             cfg, self.rng)
         # per-server "other tenants" reservation, recorded at setup so a
@@ -426,6 +579,10 @@ class Simulation:
                                       self._on_departure(a)))
             elif isinstance(ev, LoadSpike):
                 self.events.at(ev.t, (lambda e=ev: self._on_spike(e)))
+            elif isinstance(ev, LinkDegrade):
+                self.events.at(ev.t, (lambda e=ev: self.executor
+                                      .degrade_link(e.link, e.factor,
+                                                    e.duration)))
             else:
                 raise TypeError(f"unhandled scenario event: {ev}")
 

@@ -108,7 +108,11 @@ class SimBackend:
             policy=spec.policy, site_independence=spec.site_independence,
             planner=spec.planner, seed=spec.seed,
             traffic_rate_scale=spec.traffic_rate_scale,
-            traffic_chunk_s=spec.traffic_chunk_s)
+            traffic_chunk_s=spec.traffic_chunk_s,
+            storage=spec.storage, scheduler=spec.scheduler,
+            load_bw=spec.load_bw, warmup_s=spec.warmup_s,
+            nic_bw=spec.nic_bw, cloud_bw=spec.cloud_bw,
+            replication=spec.replication)
         apps = list(spec.apps) if spec.apps is not None else None
         if apps is None and spec.app_mix == "arch":
             from repro.experiment.workload import (ARCH_COMPUTE_CAP,
@@ -158,7 +162,10 @@ class TestbedBackend:
             critical_frac=spec.critical_frac, headroom=spec.headroom,
             policy=spec.policy, planner=spec.planner, alpha=spec.alpha,
             site_independence=spec.site_independence, seed=spec.seed,
-            archs=spec.archs,
+            archs=spec.archs, storage=spec.storage,
+            scheduler=spec.scheduler, load_bw=spec.load_bw,
+            warmup_s=spec.warmup_s, nic_bw=spec.nic_bw,
+            cloud_bw=spec.cloud_bw, replication=spec.replication,
             apps=list(spec.apps) if spec.apps is not None else None)
         try:
             tb.deploy()
@@ -179,7 +186,8 @@ class TestbedBackend:
             plan_wall_s=ctl.plan_wall_s,
             wall_s=time.perf_counter() - t0,
             detect_latency_s=out["detect_latency_s"],
-            extras={"client_stats": out["client_stats"]})
+            extras={"client_stats": out["client_stats"],
+                    "load_calibration": out.get("load_calibration", {})})
 
 
 register_backend(SimBackend())

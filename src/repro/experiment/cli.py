@@ -54,10 +54,24 @@ def _build_parser() -> argparse.ArgumentParser:
     run.add_argument("--settle", type=float, default=None,
                      dest="settle_s")
     run.add_argument("--time-scale", type=float, default=None)
+    run.add_argument("--storage", default=None,
+                     help="storage preset: local | edge "
+                          "(model-state plane, docs/ARCHITECTURE.md)")
+    run.add_argument("--scheduler", default=None,
+                     choices=["fifo", "criticality"],
+                     help="recovery drain-queue order")
+    run.add_argument("--load-bw", type=float, default=None,
+                     dest="load_bw",
+                     help="disk->HBM bytes/s (Fig. 2b load model)")
+    run.add_argument("--warmup-s", type=float, default=None,
+                     dest="warmup_s")
     run.add_argument("--smoke", action="store_true",
                      help="reduced CI config for the chosen backend")
     run.add_argument("--json", action="store_true", dest="as_json",
                      help="emit the summary row as JSON")
+    run.add_argument("--out", default=None, metavar="FILE",
+                     help="dump the full RunResult as JSON to FILE "
+                          "(CI trend tracking)")
 
     sub.add_parser("list", help="show scenarios/backends/policies/planners")
     return ap
@@ -74,7 +88,8 @@ def _spec_from_args(args) -> "ExperimentSpec":
                  "n_sites", "servers_per_site", "headroom",
                  "critical_frac", "app_mix", "apps_per_arch",
                  "traffic_rate_scale", "client_hz", "settle_s",
-                 "time_scale"):
+                 "time_scale", "storage", "scheduler", "load_bw",
+                 "warmup_s"):
         val = getattr(args, attr, None)
         if val is not None:
             overrides[attr] = val
@@ -141,6 +156,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     spec = _spec_from_args(args)
     res = run_experiment(spec)
     _print_result(res, args.as_json)
+    if args.out:
+        from pathlib import Path
+
+        doc = {"spec": spec.to_dict(), **res.to_json_dict()}
+        Path(args.out).write_text(json.dumps(doc, indent=1) + "\n")
+        print(f"wrote {args.out}")
     return 0
 
 

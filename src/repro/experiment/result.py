@@ -29,6 +29,13 @@ from typing import List, Optional
 from repro.core.metrics import TrafficSummary
 
 
+def _json_num(x):
+    """JSON-safe float: inf/nan become the repo-wide -1.0 sentinel."""
+    if isinstance(x, float) and not math.isfinite(x):
+        return -1.0
+    return x
+
+
 @dataclass
 class RunResult:
     backend: str
@@ -97,6 +104,46 @@ class RunResult:
             "plan_wall_ms": self.plan_wall_s * 1e3,
             "wall_s": self.wall_s,
         }
+
+    def to_json_dict(self) -> dict:
+        """The full result as JSON-serializable plain data — what
+        ``repro run --out result.json`` writes for CI trend tracking.
+        Covers the flat summary row, per-epoch summaries, every
+        recovery record (with MTTR phase breakdown), and the traffic
+        summary; backend extras are included when they are plain data
+        (e.g. the testbed's load calibration)."""
+        t = self.traffic
+        doc = {
+            "row": self.to_row(),
+            "per_epoch": [{k: _json_num(v) for k, v in e.items()}
+                          for e in self.per_epoch],
+            "overall": {k: _json_num(v) for k, v in self.overall.items()},
+            "records": [record_to_dict(r) for r in self.records],
+            "traffic": ({k: _json_num(v) for k, v in t.to_dict().items()}
+                        if t is not None else None),
+            "traffic_per_epoch": ([{k: _json_num(v) for k, v in e.items()}
+                                   for e in t.per_epoch]
+                                  if t is not None else []),
+            "detect_latency_s": _json_num(self.detect_latency_s),
+        }
+        cal = self.extras.get("load_calibration")
+        if cal:
+            doc["load_calibration"] = {k: _json_num(v)
+                                       for k, v in cal.items()}
+        return doc
+
+
+def record_to_dict(r) -> dict:
+    """One RecoveryRecord as JSON-safe plain data."""
+    return {
+        "app_id": r.app_id, "recovered": r.recovered,
+        "mttr_ms": ms_sentinel(r.mttr), "variant": r.variant,
+        "accuracy": r.accuracy, "mode": r.mode,
+        "upgraded_to": r.upgraded_to, "epoch": r.epoch,
+        "t_fail": r.t_fail, "source": getattr(r, "source", None),
+        "phases": {k: _json_num(v)
+                   for k, v in getattr(r, "phases", {}).items()},
+    }
 
 
 def ms_sentinel(seconds: float) -> float:

@@ -33,6 +33,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field, fields, replace
 from typing import Callable, List, Optional, Sequence
 
+from repro.core.variants import LOAD_BW, WARMUP_S
+
 APP_MIXES = ("synthetic", "arch")
 
 
@@ -61,6 +63,17 @@ class ExperimentSpec:
     traffic_rate_scale: float = 20.0    # sim: requests/s per unit rate q_i
     traffic_chunk_s: float = 0.5
     client_hz: float = 10.0             # testbed: per-app client rate
+    # model-state plane (core/modelstate.py): where checkpoint bytes
+    # live and what moving them costs. "local" reduces bit-exactly to
+    # the historical flat load model; "edge" is the paper-faithful
+    # constrained topology (peer NICs + one shared cloud uplink).
+    storage: str = "local"              # storage preset name
+    scheduler: str = "fifo"             # recovery drain: fifo|criticality
+    load_bw: float = LOAD_BW            # bytes/s disk->HBM (Fig. 2b)
+    warmup_s: float = WARMUP_S          # per-instance warmup seconds
+    nic_bw: Optional[float] = None      # preset overrides (None = keep)
+    cloud_bw: Optional[float] = None
+    replication: Optional[int] = None
     # time control
     settle_s: Optional[float] = None    # post-horizon settle; None = default
     time_scale: float = 1.0             # testbed: event-time compression

@@ -44,9 +44,11 @@ from repro.core.controller import (FailLiteController, LoadExecutor,
                                    RecoveryRecord)
 from repro.core.heartbeat import FailureDetector, WallClock
 from repro.core.metrics import AppLog, DowntimeWindow, TrafficSummary, aggregate
-from repro.core.scenario import (AppArrival, AppDeparture, LoadSpike,
-                                 Scenario, ServerFail, ServerRejoin,
-                                 SiteFail)
+from repro.core.modelstate import (LOCAL, LinkScale, LoadTicket,
+                                   ModelRegistry, storage_preset)
+from repro.core.scenario import (AppArrival, AppDeparture, LinkDegrade,
+                                 LoadSpike, Scenario, ServerFail,
+                                 ServerRejoin, SiteFail)
 from repro.core.variants import Application
 from repro.experiment.workload import (ARCH_COMPUTE_CAP, TESTBED_ARCHS,
                                        arch_mem_cap, build_arch_apps,
@@ -71,10 +73,18 @@ class TestbedExecutor(LoadExecutor):
     """
 
     def __init__(self, workers: Dict[str, WorkerServer], router: Router,
-                 ctl_lock: threading.RLock):
+                 ctl_lock: threading.RLock,
+                 registry: Optional[ModelRegistry] = None):
         self.workers = workers
         self.router = router
         self.ctl_lock = ctl_lock
+        # model-state plane: fetch-path selection + load-cost
+        # calibration. Every REAL load's wall time is observed into the
+        # registry's LoadCostModel (the Fig. 2b feedback loop), and
+        # non-local fetch paths pay an emulated transfer sleep priced by
+        # the same model the simulator uses.
+        self.registry = registry
+        self._scales = LinkScale()                 # LinkDegrade windows
         self._locks: Dict[str, threading.Lock] = {
             sid: threading.Lock() for sid in workers}
         self._threads: List[threading.Thread] = []
@@ -100,11 +110,49 @@ class TestbedExecutor(LoadExecutor):
         with self._n_lock:
             return self._outstanding == 0
 
-    def load(self, app, variant, server_id, on_ready):
+    def degrade_link(self, link: str, factor: float, duration: float):
+        """LinkDegrade analogue: scale the emulated fetch sleeps that
+        touch `link` for `duration` wall seconds."""
+        t = threading.Timer(duration, self._scales.degrade(link, factor))
+        t.daemon = True
+        t.start()
+
+    def _fetch_sleep(self, variant, server_id) -> tuple:
+        """(sleep_s, source): the emulated byte-transfer cost of a
+        non-local fetch path — zero for a local disk hit (the real
+        compile IS the local load cost on this testbed)."""
+        if self.registry is None:
+            return 0.0, LOCAL
+        plan = self.registry.fetch_plan(variant.name, server_id)
+        if plan.source == LOCAL or not math.isfinite(plan.bw):
+            return 0.0, plan.source
+        scale = self._scales.min_over(plan.links)
+        return variant.mem_bytes / (plan.bw * scale), plan.source
+
+    def load(self, app, variant, server_id, on_ready) -> LoadTicket:
+        ticket = LoadTicket()
+
         def work():
-            try:
+            t0 = time.monotonic()       # before the lock: queue_s must
+            try:                        # include the channel wait
                 with self._locks[server_id]:
-                    self.workers[server_id].load(app, variant)
+                    sleep_s, source = self._fetch_sleep(variant,
+                                                        server_id)
+                    if sleep_s > 0:
+                        time.sleep(sleep_s)
+                    wall = self.workers[server_id].load(app, variant)
+                    ticket.source = source
+                    ticket.fetch_s = sleep_s
+                    ticket.warmup_s = wall
+                    ticket.queue_s = (time.monotonic() - t0
+                                      - sleep_s - wall)
+                    ticket.done = True
+                    if self.registry is not None:
+                        # Fig. 2b feedback: the measured wall time
+                        # calibrates the shared load-cost model
+                        self.registry.calibration.observe(
+                            variant, source, sleep_s + wall)
+                        self.registry.stage(variant.name, server_id)
             except RuntimeError:
                 return                    # server died mid-load
             except Exception:             # noqa: BLE001
@@ -114,6 +162,7 @@ class TestbedExecutor(LoadExecutor):
             with self.ctl_lock:
                 on_ready(time.monotonic())
         self._spawn(work)
+        return ticket
 
     def activate(self, app, variant, server_id):
         w = self.workers[server_id]
@@ -128,11 +177,30 @@ class TestbedExecutor(LoadExecutor):
                 with self._locks[server_id]:
                     if not self.workers[server_id].has(variant.name):
                         self.workers[server_id].load(app, variant)
+                if self.registry is not None:
+                    self.registry.stage(variant.name, server_id)
             except RuntimeError:
                 pass
             except Exception:             # noqa: BLE001
                 import traceback
                 traceback.print_exc()
+        self._spawn(work)
+
+    def replicate(self, app, variant, server_id, on_done=None):
+        """Background checkpoint copy: pay the emulated transfer, then
+        stage the bytes on the worker's cold store + the registry."""
+        def work():
+            sleep_s, _source = self._fetch_sleep(variant, server_id)
+            if sleep_s > 0:
+                time.sleep(sleep_s)
+            w = self.workers.get(server_id)
+            if w is not None:
+                w.stage_cold(app, variant)
+            if self.registry is not None:
+                self.registry.stage(variant.name, server_id)
+            if on_done is not None:
+                with self.ctl_lock:
+                    on_done(time.monotonic())
         self._spawn(work)
 
     def join(self, timeout: float = 15.0):
@@ -279,6 +347,12 @@ class MiniTestbed:
                  planner: Optional[str] = None, alpha: float = 0.1,
                  site_independence: bool = False, seed: int = 0,
                  archs: Optional[List[str]] = None,
+                 storage: str = "local", scheduler: str = "fifo",
+                 load_bw: Optional[float] = None,
+                 warmup_s: Optional[float] = None,
+                 nic_bw: Optional[float] = None,
+                 cloud_bw: Optional[float] = None,
+                 replication: Optional[int] = None,
                  apps: Optional[Sequence[Application]] = None):
         self.rng = random.Random(seed)
         self.clock = WallClock()
@@ -309,18 +383,25 @@ class MiniTestbed:
                                     "compute": ARCH_COMPUTE_CAP})
                    for si in range(n_sites)
                    for sj in range(servers_per_site)]
-        self.cluster = Cluster(servers)
+        # model-state plane: same storage presets + ModelRegistry as
+        # the simulator; real measured loads calibrate its cost model
+        self.cluster = Cluster(servers, storage=storage_preset(
+            storage, disk_bw=load_bw, warmup_s=warmup_s, nic_bw=nic_bw,
+            cloud_bw=cloud_bw, replication=replication))
+        self.registry = ModelRegistry(self.cluster, self.cluster.storage)
 
         # --- worker threads ----------------------------------------------
         self.workers: Dict[str, WorkerServer] = {
             s.id: WorkerServer(s.id, self.detector).start()
             for s in servers}
         self.executor = TestbedExecutor(self.workers, self.router,
-                                        self._ctl_lock)
+                                        self._ctl_lock,
+                                        registry=self.registry)
         self.controller = FailLiteController(
             self.cluster, self.clock, self.executor, policy=policy,
             alpha=alpha, site_independence=site_independence,
-            planner=planner, detector=self.detector)
+            planner=planner, detector=self.detector,
+            registry=self.registry, scheduler=scheduler)
         # controller routing -> serving router + telemetry, through the
         # first-class RoutingTable observer hooks
         self.controller.routing.observer = self._on_route_set
@@ -553,6 +634,9 @@ class MiniTestbed:
                 self._on_departure(ev.app_id)
             elif isinstance(ev, LoadSpike):
                 self._on_spike(ev, time_scale)
+            elif isinstance(ev, LinkDegrade):
+                self.executor.degrade_link(ev.link, ev.factor,
+                                           ev.duration * time_scale)
             else:
                 raise TypeError(f"unhandled scenario event: {ev}")
 
@@ -589,6 +673,10 @@ class MiniTestbed:
             "unplaced_arrivals": stats["unplaced_arrivals"],
             "records": flat,
             "traffic": traffic,
+            # Fig. 2b feedback: effective load bandwidth per fetch
+            # source, calibrated from the REAL loads this run executed
+            # (feed into a sim spec to price loads identically there)
+            "load_calibration": self.registry.calibration.to_dict(),
             "detect_latency_s": (self._detect_latency
                                  if self._detect_latency is not None
                                  else math.nan),

@@ -8,8 +8,8 @@ import random
 import pytest
 
 from repro.core.cluster import Cluster, RESOURCES, Server, make_cluster
-from repro.core.heuristic import faillite_heuristic, match
-from repro.core.placement import solve_warm_placement
+from repro.core.planner import (faillite_heuristic, match,
+                                solve_warm_placement)
 from repro.core.variants import (Application, Variant, build_ladder,
                                  synthetic_family)
 

@@ -13,7 +13,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.cluster import RESOURCES, make_cluster  # noqa: E402
-from repro.core.heuristic import faillite_heuristic, match  # noqa: E402
+from repro.core.planner import faillite_heuristic, match  # noqa: E402
 from repro.core.variants import Application, synthetic_family  # noqa: E402
 
 

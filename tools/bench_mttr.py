@@ -1,0 +1,164 @@
+#!/usr/bin/env python
+"""MTTR-breakdown benchmark -> BENCH_mttr.json.
+
+Runs the `cold-load-storm` scenario (site outage + degraded cloud
+uplink) on the "edge" storage preset across the model-state plane's
+policy matrix — protection policy x placement planner x recovery
+scheduler — and records, per cell, the controller MTTR, the pooled
+client-observed downtime percentiles, and the mean MTTR phase
+decomposition (detect / plan / queue / fetch / warmup / route):
+
+    PYTHONPATH=src python tools/bench_mttr.py                 # full
+    PYTHONPATH=src python tools/bench_mttr.py --smoke         # CI
+    PYTHONPATH=src python tools/bench_mttr.py --check-p99-ratio 2.0
+
+`--check-p99-ratio X` exits non-zero unless the criticality scheduler +
+locality planner beat the FIFO + greedy baseline by an X-fold p99
+client-observed MTTR — the acceptance gate for the model-state plane.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+# (policy, planner, scheduler); None planner = the policy default
+CELLS = [
+    ("faillite", None, "fifo"),            # baseline
+    ("faillite", None, "criticality"),
+    ("faillite", "locality", "fifo"),
+    ("faillite", "locality", "criticality"),
+    ("full-cold", None, "fifo"),
+]
+BASELINE = ("faillite", None, "fifo")
+TUNED = ("faillite", "locality", "criticality")
+
+PHASES = ("detect", "plan", "queue", "fetch", "warmup", "route")
+
+
+def run_cell(policy, planner, scheduler, seeds, *, n_sites,
+             servers_per_site):
+    import numpy as np
+
+    from repro.experiment import ExperimentSpec, run_experiment
+
+    records, downs, n_unrec = [], [], 0
+    for seed in seeds:
+        spec = ExperimentSpec(
+            scenario="cold-load-storm", storage="edge", policy=policy,
+            planner=planner, scheduler=scheduler, seed=seed,
+            n_sites=n_sites, servers_per_site=servers_per_site,
+            headroom=0.2)
+        res = run_experiment(spec)
+        records += list(res.records)
+        downs += [w.client_downtime for w in res.traffic.windows
+                  if w.recovered and math.isfinite(w.client_downtime)]
+        n_unrec += res.traffic.n_unrecovered_windows
+
+    recovered = [r for r in records if r.recovered]
+    cold = [r for r in recovered if r.mode.startswith("cold")]
+    phase_ms = {}
+    for ph in PHASES:
+        vals = [r.phases.get(ph, 0.0) for r in cold if r.phases]
+        phase_ms[ph] = round(1e3 * sum(vals) / len(vals), 3) if vals \
+            else 0.0
+    sources = {}
+    for r in cold:
+        if r.source:
+            sources[r.source] = sources.get(r.source, 0) + 1
+    downs_a = np.asarray(downs, dtype=float)
+    return {
+        "policy": policy,
+        "planner": planner or "greedy",
+        "scheduler": scheduler,
+        "n": len(records),
+        "recovery_rate": round(len(recovered) / max(len(records), 1), 4),
+        "ctl_mttr_ms": round(1e3 * sum(r.mttr for r in recovered)
+                             / max(len(recovered), 1), 2),
+        "client_p50_ms": round(float(np.percentile(downs_a, 50)) * 1e3, 2)
+        if downs_a.size else -1.0,
+        "client_p99_ms": round(float(np.percentile(downs_a, 99)) * 1e3, 2)
+        if downs_a.size else -1.0,
+        "n_windows": len(downs),
+        "n_unrecovered_windows": n_unrec,
+        "phase_ms": phase_ms,
+        "sources": sources,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_mttr.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one seed, small cluster (CI)")
+    ap.add_argument("--seeds", default=None,
+                    help="comma-separated seed list")
+    ap.add_argument("--check-p99-ratio", type=float, default=None,
+                    help="fail unless criticality+locality beats "
+                         "fifo+greedy by this p99 client-MTTR factor")
+    args = ap.parse_args()
+
+    if args.seeds:
+        seeds = [int(s) for s in args.seeds.split(",")]
+    else:
+        seeds = [0] if args.smoke else [0, 1, 2]
+    shape = dict(n_sites=3, servers_per_site=4) if args.smoke \
+        else dict(n_sites=4, servers_per_site=5)
+
+    cells = []
+    for policy, planner, scheduler in CELLS:
+        row = run_cell(policy, planner, scheduler, seeds, **shape)
+        cells.append(row)
+        print(f"mttr,{policy},{row['planner']},{scheduler},"
+              f"rec={row['recovery_rate']},"
+              f"ctl={row['ctl_mttr_ms']}ms,"
+              f"p99={row['client_p99_ms']}ms,"
+              f"fetch={row['phase_ms']['fetch']}ms,"
+              f"queue={row['phase_ms']['queue']}ms", flush=True)
+
+    def cell(key):
+        policy, planner, scheduler = key
+        return next(c for c in cells if c["policy"] == policy
+                    and c["planner"] == (planner or "greedy")
+                    and c["scheduler"] == scheduler)
+
+    base, tuned = cell(BASELINE), cell(TUNED)
+    # -1.0 is the no-recovered-windows sentinel: a cell with no data is
+    # a FAILURE of the gate, never a vacuous pass
+    if base["client_p99_ms"] <= 0 or tuned["client_p99_ms"] <= 0:
+        ratio = float("nan")
+    else:
+        ratio = base["client_p99_ms"] / tuned["client_p99_ms"]
+    doc = {
+        "bench": "mttr",
+        "description": "cold-load-storm MTTR breakdown on the 'edge' "
+                       "storage preset: protection policy x planner x "
+                       "recovery scheduler; client percentiles pooled "
+                       "over seeds, phases averaged over cold "
+                       "recoveries",
+        "scenario": "cold-load-storm",
+        "storage": "edge",
+        "seeds": seeds,
+        "cluster": shape,
+        "unit": "milliseconds",
+        "cells": cells,
+        "p99_speedup_fifo_greedy_vs_criticality_locality": round(ratio, 2),
+    }
+    Path(args.out).write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {args.out} (p99 speedup {ratio:.2f}x)")
+
+    if args.check_p99_ratio is not None \
+            and not ratio >= args.check_p99_ratio:
+        print(f"FAIL: p99 speedup {ratio:.2f}x < "
+              f"{args.check_p99_ratio}x")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
