@@ -14,7 +14,7 @@ Skips (recorded in DESIGN.md §Arch-applicability):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -29,7 +29,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
-from repro.core.cluster import Cluster, Instance, RESOURCES
+from repro.core.cluster import Cluster, Instance
 from repro.core.datastore import DataStore
 from repro.core.heartbeat import Clock, FailureDetector
 from repro.core.modelstate import ModelRegistry
@@ -129,7 +129,7 @@ class RoutingTable:
 @dataclass
 class _PendingLoad:
     """One queued recovery load awaiting dispatch."""
-    prio: tuple                    # (stage, not critical, -rate, seq)
+    prio: tuple                # (stage, -boost, not critical, -rate, seq)
     app: Application
     variant: Variant
     server_id: str
@@ -174,10 +174,19 @@ class RecoveryScheduler:
         self._seq = itertools.count()
         self._queued: Dict[str, List[_PendingLoad]] = {}
         self._inflight: Dict[str, _PendingLoad] = {}
+        # autopilot-set per-app priority boosts (observed request rates):
+        # empty by default, so the priority tuple's boost slot is 0.0
+        # for every app and the historical ordering is untouched
+        self.boosts: Dict[str, float] = {}
+
+    def set_boosts(self, boosts: Dict[str, float]):
+        """Reorder future drains by per-app boost (higher first); only
+        the autopilot calls this. In-flight loads are not preempted."""
+        self.boosts = dict(boosts)
 
     def priority(self, app: Application, stage: int = 0) -> tuple:
-        return (stage, not app.critical, -app.request_rate,
-                next(self._seq))
+        return (stage, -self.boosts.get(app.id, 0.0), not app.critical,
+                -app.request_rate, next(self._seq))
 
     def submit(self, app: Application, variant: Variant, server_id: str,
                on_ready: Callable[[float], None], *,
@@ -261,7 +270,8 @@ class FailLiteController:
                  detector: Optional[FailureDetector] = None,
                  datastore: Optional[DataStore] = None,
                  registry: Optional[ModelRegistry] = None,
-                 scheduler: str = "fifo"):
+                 scheduler: str = "fifo",
+                 autopilot: Optional[object] = None):
         assert policy in POLICIES, policy
         self.cluster = cluster
         self.clock = clock
@@ -315,6 +325,14 @@ class FailLiteController:
         # per-app recovery generation; bumping it invalidates callbacks of
         # loads scheduled before a newer failure/departure superseded them
         self._gen: Dict[str, int] = {}
+        # adaptive protection (core/autopilot.py): None = the static
+        # criticality rule, bit-exact historical behavior. When set, the
+        # re-protection sweep consults it first and `_warm_candidates`
+        # follows its protected set. `metrics_feed` is the backend's
+        # window into the live traffic plane: a zero-arg callable
+        # returning {app_id: AppSignal} at the current instant.
+        self.autopilot = autopilot
+        self.metrics_feed: Optional[Callable[[], Dict]] = None
 
     @property
     def epoch(self) -> int:
@@ -349,6 +367,13 @@ class FailLiteController:
         return server_id
 
     def _warm_candidates(self) -> List[Application]:
+        if (self.autopilot is not None
+                and getattr(self.autopilot, "protected", None) is not None
+                and self.policy == "faillite"):
+            # adaptive set, ranked by observed rate; before the first
+            # decide() the static criticality rule below applies
+            return [self.apps[aid] for aid in self.autopilot.last.protected
+                    if aid in self.apps]
         if self.policy in ("faillite", "full-warm-k"):
             return [a for a in self.apps.values() if a.critical]
         if self.policy == "full-warm":
@@ -705,11 +730,58 @@ class FailLiteController:
     # after every churn/failure/rejoin event.
     # ------------------------------------------------------------------
     def reprotect(self) -> Dict[str, int]:
+        demoted = self._autopilot_step() if self.autopilot is not None \
+            else 0
         retried = self._retry_unrecovered()
         replanned = self.replan_lost_backups()
         replicated = self._replicate_underprotected()
         return {"retried": retried, "replanned": len(replanned),
-                "replicated": replicated}
+                "replicated": replicated, "demoted": demoted}
+
+    def _autopilot_step(self) -> int:
+        """Run one adaptive-protection sweep: consult the policy with a
+        live view of the metrics plane, then apply its decisions —
+        demotions are evicted here (promotions materialize through
+        `replan_lost_backups`, which follows the protected set via
+        `_warm_candidates`), the replication target is retuned on the
+        registry, and the drain scheduler gets fresh priority boosts."""
+        from repro.core.autopilot import AutopilotView
+
+        signals = self.metrics_feed() if self.metrics_feed is not None \
+            else {}
+        view = AutopilotView(
+            now=self.clock.now(),
+            apps=dict(self.apps),
+            warm_ids=set(self.warm),
+            signals=signals,
+            fail_times=[next(iter(ep.values())).t_fail
+                        for ep in self.epoch_records if ep],
+            base_replication=(self.registry.storage.replication
+                              if self.registry is not None else 2),
+            unrecovered=set(self._unrecovered))
+        dec = self.autopilot.decide(view)
+
+        n_demoted = 0
+        for app_id in dec.demote:
+            entry = self.warm.pop(app_id, None)
+            if entry is None:
+                continue
+            v, sid, key = entry
+            self.cluster.remove(key, sid)
+            self.ds.delete(f"warm/{app_id}")
+            # demoted, not abandoned: checkpoint bytes stay on disk, so
+            # the app keeps cold (progressive) protection
+            self.cold_protected.add(app_id)
+            self.ds.put(f"cold/{app_id}", {"variant": v.name,
+                                           "reason": "autopilot"})
+            n_demoted += 1
+        if (dec.replication is not None and self.registry is not None
+                and not self.registry.storage.replicate_all
+                and dec.replication != self.registry.storage.replication):
+            self.registry.storage = self.registry.storage.with_(
+                replication=dec.replication)
+        self.scheduler.set_boosts(dec.boosts)
+        return n_demoted
 
     def _replicate_underprotected(self, max_per_round: int = 2) -> int:
         """Idle-round proactive checkpoint re-replication: when the

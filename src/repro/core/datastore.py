@@ -9,9 +9,8 @@ from __future__ import annotations
 import copy
 import json
 import threading
-import time
 from pathlib import Path
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 
 class DataStore:

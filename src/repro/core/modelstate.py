@@ -43,8 +43,8 @@ from __future__ import annotations
 
 import math
 import threading
-from dataclasses import dataclass, field, replace
-from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass, replace
+from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 from repro.core.variants import LOAD_BW, WARMUP_S, Variant
 

@@ -24,7 +24,7 @@ from repro.core.planner.legacy import (faillite_heuristic_legacy, match,
                                        worst_fit)
 from repro.core.planner.state import PlannerState, ScratchView
 from repro.core.planner.vectorized import faillite_heuristic, plan_greedy
-from repro.core.planner import policies as _policies  # registers planners
+from repro.core.planner import policies as _policies  # noqa: F401  (registers planners)
 
 __all__ = [
     "HeuristicResult", "PlacementResult", "PlanRequest", "PlanResult",

@@ -21,8 +21,10 @@ rolling-with-rejoin, churn-under-failure, flaky-node, plus
 cold-load-storm (a site outage under a degraded cloud uplink — the
 model-state plane's worst case: every surviving server cold-loads at
 once and the fetch paths contend; pair it with the "edge" storage
-preset). Generators (`cascade_failures`, `rolling_failures`,
-`flaky_server`) compose into custom scenarios.
+preset), and chaos (a seeded randomized churn stream from
+core/chaos.py — the soak harness's always-on scenario). Generators
+(`cascade_failures`, `rolling_failures`, `flaky_server`) compose into
+custom scenarios.
 
 Every scenario replay is also measured at the *request* level: while the
 events above drive the control plane, the simulator's traffic plane
@@ -43,7 +45,7 @@ yields the same event trace AND the same per-request trace; see
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cluster import Cluster
@@ -327,6 +329,15 @@ def _cold_load_storm(cluster, apps, rng) -> Scenario:
                     "bandwidth")
 
 
+def _chaos(cluster, apps, rng) -> Scenario:
+    """Seeded randomized churn stream (core/chaos.py): crashes with
+    staggered rejoins, site blackouts, load spikes, and link degrades
+    drawn from a marked Poisson process — the soak harness's scenario.
+    Imported lazily: chaos.py composes the event vocabulary above."""
+    from repro.core.chaos import build_chaos
+    return build_chaos(cluster, rng)
+
+
 ScenarioBuilder = Callable[[Cluster, Sequence[Application],
                             random.Random], Scenario]
 
@@ -338,6 +349,7 @@ SCENARIOS: Dict[str, ScenarioBuilder] = {
     "churn-under-failure": _churn_under_failure,
     "flaky-node": _flaky_node,
     "cold-load-storm": _cold_load_storm,
+    "chaos": _chaos,
 }
 
 

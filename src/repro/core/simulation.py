@@ -35,23 +35,21 @@ from __future__ import annotations
 import heapq
 import itertools
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.core.cluster import Cluster, make_cluster
+from repro.core.cluster import make_cluster
 from repro.core.controller import FailLiteController, LoadExecutor
 from repro.core.heartbeat import FailureDetector, SimClock
 from repro.core.metrics import TrafficSummary
 from repro.core.modelstate import (CLOUD_LINK, LOCAL, LinkScale,
                                    LoadTicket, ModelRegistry, disk_link,
                                    nic_link, storage_preset)
-from repro.core.scenario import (AppArrival, AppDeparture, LinkDegrade,
-                                 LoadSpike, Scenario, ScenarioEvent,
-                                 ServerFail, ServerRejoin, SiteFail,
-                                 build_scenario)
+from repro.core.scenario import (
+    AppArrival, AppDeparture, LinkDegrade, LoadSpike, Scenario, ServerFail, ServerRejoin, SiteFail, build_scenario)
 from repro.core.traffic import TrafficConfig, TrafficPlane
-from repro.core.variants import (Application, Variant, build_ladder,
-                                 synthetic_family, LOAD_BW, WARMUP_S)
+from repro.core.variants import (
+    Application, Variant, synthetic_family, LOAD_BW, WARMUP_S)
 
 DETECT_SWEEP_S = 0.100        # controller sweep period (paper §5.1)
 HEARTBEAT_S = 0.020
@@ -251,6 +249,10 @@ class SimConfig:
     # rate q_i (0 disables the plane) and the bulk-generation window
     traffic_rate_scale: float = 20.0
     traffic_chunk_s: float = 0.5
+    # diurnal rate modulation (0 amplitude = plain Poisson, the
+    # historical default); shared with the autopilot's trough/peak model
+    traffic_diurnal_amplitude: float = 0.0
+    traffic_diurnal_period: float = 240.0
     # model-state plane (core/modelstate.py): storage preset by name
     # ("local" = every checkpoint on every disk, the exact historical
     # behavior; "edge" = paper-faithful constrained topology), the
@@ -264,6 +266,9 @@ class SimConfig:
     cloud_bw: Optional[float] = None
     replication: Optional[int] = None
     scheduler: str = "fifo"
+    # adaptive protection (core/autopilot.py): False = the static
+    # criticality rule, bit-exact historical behavior
+    autopilot: bool = False
 
 
 def synthetic_apps(cfg: SimConfig, rng: random.Random,
@@ -367,12 +372,20 @@ class Simulation:
         self.executor = SimLoadExecutor(self.events, bw=cfg.load_bw,
                                         registry=self.registry)
         self.detector = FailureDetector(self.clock, interval=HEARTBEAT_S)
+        pilot = None
+        if cfg.autopilot:
+            from repro.core.autopilot import (AutopilotConfig,
+                                              AutopilotPolicy)
+            pilot = AutopilotPolicy(AutopilotConfig(
+                diurnal_amplitude=cfg.traffic_diurnal_amplitude,
+                diurnal_period=cfg.traffic_diurnal_period))
         self.controller = FailLiteController(
             self.cluster, self.clock, self.executor,
             policy=cfg.policy, alpha=cfg.alpha,
             site_independence=cfg.site_independence, use_ilp=cfg.use_ilp,
             planner=cfg.planner, detector=self.detector,
-            registry=self.registry, scheduler=cfg.scheduler)
+            registry=self.registry, scheduler=cfg.scheduler,
+            autopilot=pilot)
         self.apps = apps if apps is not None else synthetic_apps(
             cfg, self.rng)
         # per-server "other tenants" reservation, recorded at setup so a
@@ -386,10 +399,18 @@ class Simulation:
         if cfg.traffic_rate_scale > 0:
             self.traffic = TrafficPlane(
                 seed=cfg.seed,
-                cfg=TrafficConfig(rate_scale=cfg.traffic_rate_scale,
-                                  chunk_s=cfg.traffic_chunk_s))
+                cfg=TrafficConfig(
+                    rate_scale=cfg.traffic_rate_scale,
+                    chunk_s=cfg.traffic_chunk_s,
+                    diurnal_amplitude=cfg.traffic_diurnal_amplitude,
+                    diurnal_period=cfg.traffic_diurnal_period))
             self.controller.routing.observer = self._on_route_set
             self.controller.routing.drop_observer = self._on_route_drop
+        if cfg.autopilot:
+            self.controller.metrics_feed = self._autopilot_feed
+        # warm-headroom observation: (bytes, count) sampled once per
+        # re-protection sweep (pure measurement — no events, no RNG)
+        self._warm_samples: List[Tuple[float, int]] = []
 
     # ------------------------------------------------------------------
     # traffic plane hooks
@@ -407,6 +428,58 @@ class Simulation:
 
     def _on_route_drop(self, app_id: str):
         self.traffic.mark_gone(app_id, self.clock.now())
+
+    def _autopilot_feed(self):
+        """Live metrics-plane view for the autopilot: observed arrival
+        rates and recent client downtime from the traffic plane, plus a
+        modeled SLO margin for the variant each route currently serves.
+        Pure observation — reading it perturbs no event or RNG state."""
+        from repro.core.autopilot import AppSignal
+
+        now = self.clock.now()
+        ctl = self.controller
+        rates = (self.traffic.current_rates()
+                 if self.traffic is not None else {})
+        downs = (self.traffic.downtime_since(now - 30.0, now)
+                 if self.traffic is not None else {})
+        tcfg = self.traffic.cfg if self.traffic is not None \
+            else TrafficConfig()
+        out = {}
+        for app_id, app in ctl.apps.items():
+            q = rates.get(app_id, app.request_rate)
+            route = ctl.routing.routes.get(app_id)
+            try:
+                v = app.variant_by_name(route[1]) if route else app.full
+            except KeyError:
+                v = app.full
+            util = min(q * v.compute * tcfg.util_k, tcfg.util_cap)
+            latency = v.compute / (1.0 - util)
+            out[app_id] = AppSignal(
+                rate=q,
+                slo_margin=app.latency_slo - latency,
+                down=app_id in ctl._unrecovered,
+                recent_downtime_s=downs.get(app_id, 0.0))
+        return out
+
+    def protection_summary(self) -> Dict[str, float]:
+        """Warm-replica headroom actually spent over the run: mean and
+        final warm bytes / instance counts from the per-sweep samples —
+        the soak harness's equal-or-lower-headroom check."""
+        warm = self.controller.warm.values()
+        final_bytes = float(sum(v.mem_bytes for v, _, _ in warm))
+        if not self._warm_samples:
+            return {"warm_bytes_mean": final_bytes,
+                    "warm_bytes_final": final_bytes,
+                    "n_warm_mean": float(len(self.controller.warm)),
+                    "n_warm_final": len(self.controller.warm)}
+        return {
+            "warm_bytes_mean": (sum(b for b, _ in self._warm_samples)
+                                / len(self._warm_samples)),
+            "warm_bytes_final": final_bytes,
+            "n_warm_mean": (sum(n for _, n in self._warm_samples)
+                            / len(self._warm_samples)),
+            "n_warm_final": len(self.controller.warm),
+        }
 
     def _start_traffic(self, t_end: float):
         """Schedule the chunked bulk-generation loop up to t_end."""
@@ -590,6 +663,11 @@ class Simulation:
 
         def reprotect_tick():
             self.controller.reprotect()
+            # pure observation for the headroom trend; no event/RNG state
+            self._warm_samples.append(
+                (float(sum(v.mem_bytes for v, _, _
+                           in self.controller.warm.values())),
+                 len(self.controller.warm)))
             if self.clock.now() + reprotect_every <= t_end:
                 self.events.after(reprotect_every, reprotect_tick)
 

@@ -220,6 +220,31 @@ class TrafficPlane:
                 self._arrivals[app.id].append(arr)
                 self._chunk_rates[app.id].append((arr.size, q))
 
+    # -- live introspection (autopilot feed) --------------------------------
+    def current_rates(self) -> Dict[str, float]:
+        """Latest observed logical rate q_i per app (the rate the most
+        recent chunk was generated at, diurnal/spike modulation
+        included) — the autopilot's arrival-rate signal. Apps whose
+        last chunk drew zero arrivals keep their previous observation."""
+        return {app_id: chunks[-1][1]
+                for app_id, chunks in self._chunk_rates.items() if chunks}
+
+    def downtime_since(self, t0: float, now: float) -> Dict[str, float]:
+        """Per-app client-observed downtime seconds overlapping
+        [t0, now] — closed windows clipped to the horizon plus any
+        still-open blackout."""
+        out: Dict[str, float] = {}
+        for w in self.windows:
+            end = w.t_end if math.isfinite(w.t_end) else now
+            overlap = min(end, now) - max(w.t_start, t0)
+            if overlap > 0:
+                out[w.app_id] = out.get(w.app_id, 0.0) + overlap
+        for app_id, w in self._open.items():
+            overlap = now - max(w.t_start, t0)
+            if overlap > 0:
+                out[app_id] = out.get(app_id, 0.0) + overlap
+        return out
+
     # -- aggregation --------------------------------------------------------
     def summarize(self, t_end: float) -> TrafficSummary:
         """Classify every request against its app's timeline and fold

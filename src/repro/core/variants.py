@@ -14,7 +14,7 @@ Load time follows Fig. 2b: bytes / (host->HBM bandwidth) + warmup.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.models.config import ModelConfig

@@ -109,7 +109,10 @@ class SimBackend:
             planner=spec.planner, seed=spec.seed,
             traffic_rate_scale=spec.traffic_rate_scale,
             traffic_chunk_s=spec.traffic_chunk_s,
+            traffic_diurnal_amplitude=spec.traffic_diurnal_amplitude,
+            traffic_diurnal_period=spec.traffic_diurnal_period,
             storage=spec.storage, scheduler=spec.scheduler,
+            autopilot=spec.autopilot,
             load_bw=spec.load_bw, warmup_s=spec.warmup_s,
             nic_bw=spec.nic_bw, cloud_bw=spec.cloud_bw,
             replication=spec.replication)
@@ -142,7 +145,8 @@ class SimBackend:
             records=res.records, unplaced_arrivals=res.unplaced_arrivals,
             n_apps_final=res.n_apps_final, traffic=res.traffic,
             plan_wall_s=sim.controller.plan_wall_s,
-            wall_s=time.perf_counter() - t0, sim_result=res)
+            wall_s=time.perf_counter() - t0, sim_result=res,
+            extras={"protection": sim.protection_summary()})
 
 
 # ---------------------------------------------------------------------------
@@ -155,6 +159,10 @@ class TestbedBackend:
     def run(self, spec: ExperimentSpec) -> RunResult:
         from repro.serving.testbed import MiniTestbed
 
+        if spec.autopilot:
+            raise ValueError(
+                "autopilot needs the simulator's live metrics feed; "
+                "run the spec with backend='sim'")
         t0 = time.perf_counter()
         tb = MiniTestbed(
             n_sites=spec.n_sites, servers_per_site=spec.servers_per_site,

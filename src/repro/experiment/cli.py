@@ -50,6 +50,15 @@ def _build_parser() -> argparse.ArgumentParser:
                      help="comma-separated arch list (arch mix)")
     run.add_argument("--apps-per-arch", type=int, default=None)
     run.add_argument("--traffic-rate-scale", type=float, default=None)
+    run.add_argument("--diurnal-amplitude", type=float, default=None,
+                     dest="traffic_diurnal_amplitude",
+                     help="sinusoidal rate modulation depth (0 = plain "
+                          "Poisson)")
+    run.add_argument("--diurnal-period", type=float, default=None,
+                     dest="traffic_diurnal_period")
+    run.add_argument("--autopilot", action="store_true", default=None,
+                     help="adaptive protection from the live metrics "
+                          "plane (core/autopilot.py; sim only)")
     run.add_argument("--client-hz", type=float, default=None)
     run.add_argument("--settle", type=float, default=None,
                      dest="settle_s")
@@ -87,9 +96,10 @@ def _spec_from_args(args) -> "ExperimentSpec":
     for attr in ("backend", "scenario", "policy", "planner", "seed",
                  "n_sites", "servers_per_site", "headroom",
                  "critical_frac", "app_mix", "apps_per_arch",
-                 "traffic_rate_scale", "client_hz", "settle_s",
-                 "time_scale", "storage", "scheduler", "load_bw",
-                 "warmup_s"):
+                 "traffic_rate_scale", "traffic_diurnal_amplitude",
+                 "traffic_diurnal_period", "autopilot", "client_hz",
+                 "settle_s", "time_scale", "storage", "scheduler",
+                 "load_bw", "warmup_s"):
         val = getattr(args, attr, None)
         if val is not None:
             overrides[attr] = val

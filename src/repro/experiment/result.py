@@ -130,6 +130,12 @@ class RunResult:
         if cal:
             doc["load_calibration"] = {k: _json_num(v)
                                        for k, v in cal.items()}
+        prot = self.extras.get("protection")
+        if prot:
+            # warm-replica headroom actually spent (sim backend): the
+            # soak trend's equal-or-lower-headroom evidence
+            doc["protection"] = {k: _json_num(v)
+                                 for k, v in prot.items()}
         return doc
 
 

@@ -62,6 +62,8 @@ class ExperimentSpec:
     # traffic plane
     traffic_rate_scale: float = 20.0    # sim: requests/s per unit rate q_i
     traffic_chunk_s: float = 0.5
+    traffic_diurnal_amplitude: float = 0.0   # sim: 0 = plain Poisson
+    traffic_diurnal_period: float = 240.0
     client_hz: float = 10.0             # testbed: per-app client rate
     # model-state plane (core/modelstate.py): where checkpoint bytes
     # live and what moving them costs. "local" reduces bit-exactly to
@@ -69,6 +71,9 @@ class ExperimentSpec:
     # constrained topology (peer NICs + one shared cloud uplink).
     storage: str = "local"              # storage preset name
     scheduler: str = "fifo"             # recovery drain: fifo|criticality
+    # adaptive protection (core/autopilot.py): sim-only closed loop from
+    # observed traffic back into the warm set / replication / drain order
+    autopilot: bool = False
     load_bw: float = LOAD_BW            # bytes/s disk->HBM (Fig. 2b)
     warmup_s: float = WARMUP_S          # per-instance warmup seconds
     nic_bw: Optional[float] = None      # preset overrides (None = keep)

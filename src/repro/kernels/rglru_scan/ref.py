@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 
 def rglru_scan_ref(a, b, h0):

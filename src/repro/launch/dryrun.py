@@ -28,7 +28,6 @@ from functools import partial
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
@@ -194,7 +193,6 @@ def lower_cell(arch: str, shape_name: str, mesh, *, opt=None,
             # chunk-scan correction: cost_analysis counts the WKV chunk
             # body once; the (unroll=2) - (unroll=1) delta is one chunk's
             # exact cost, multiplied out over all chunks and layers.
-            from repro.models.rwkv6 import wkv_chunked  # chunk=32 default
             nchunk = -(-shape.seq_len // 32)
             f1b, b1b, _ = _costs_of(c1b)
             # fusion differences can make the byte delta slightly

@@ -5,8 +5,6 @@ These are the functions the dry-run lowers and the drivers jit.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -18,8 +18,6 @@ import time
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.launch.steps import make_train_step

@@ -11,8 +11,8 @@ declarative and serializable.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 import jax.numpy as jnp
 

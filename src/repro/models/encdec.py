@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.parallel.sharding import logical_constraint
-from repro.models.model import ACT_SPEC, HEAD_SPEC, RESID_SPEC, _tree_stack
+from repro.models.model import ACT_SPEC, RESID_SPEC, _tree_stack
 
 
 def _maybe_scan(cfg, body, carry, xs, length):

@@ -13,8 +13,6 @@ numerical oracle for the Pallas flash_attention kernel.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -84,7 +84,6 @@ def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
     pat = cfg.block_pattern
     plen = len(pat)
     n_cycles = cfg.num_layers // plen
-    n_tail = cfg.num_layers % plen
 
     keys = jax.random.split(key, cfg.num_layers + 2)
     layer_params = [init_layer(keys[i], cfg, kinds[i])
@@ -352,8 +351,6 @@ def _merge_attention_stack(params, cfg):
     48 GiB/device on train_4k); a per-layer scan caps the peak at one.
     """
     kinds = cfg.layer_kinds()
-    plen = len(cfg.block_pattern)
-    n_cycles = cfg.num_layers // plen
 
     def interleave(*stacks):
         # stacks: plen arrays of (n_cycles, ...) -> (n_cycles*plen, ...)

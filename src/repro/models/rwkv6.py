@@ -189,8 +189,6 @@ def time_mix(params, cfg, x, state=None, use_chunked=True):
     x: (B,S,d). state: None or {"last": (B,d), "wkv": (B,nh,hs,hs) fp32}.
     """
     B, S, d = x.shape
-    hs = cfg.rwkv_head_size
-    nh = d // hs
     shifted = _token_shift(x, None if state is None else state["last"])
     r, k, v, g, lw = _rkvgw(params, cfg, x, shifted)
     u = params["bonus_u"]

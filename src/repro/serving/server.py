@@ -11,11 +11,9 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from dataclasses import dataclass
-from typing import Callable, Dict, Optional
+from typing import Dict
 
 import jax
-import numpy as np
 
 from repro.core.heartbeat import FailureDetector
 from repro.core.variants import Application, Variant

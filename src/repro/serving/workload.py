@@ -9,10 +9,9 @@ same arrival-process family (Poisson, optionally diurnally modulated).
 
 from __future__ import annotations
 
-import itertools
 import random
 import time
-from typing import Iterator, List
+from typing import List
 
 import numpy as np
 

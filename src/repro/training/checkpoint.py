@@ -15,7 +15,7 @@ import os
 import shutil
 import tempfile
 from pathlib import Path
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -81,7 +81,6 @@ def restore_checkpoint(ckpt_dir: Path, step: int, params_tmpl,
     flat = {e["path"]: e["file"] for e in manifest["leaves"]}
 
     def rebuild(tmpl, root, shs):
-        leaves = dict(_flatten(tmpl, root))
         sh_leaves = dict(_flatten(shs, root)) if shs is not None else {}
 
         def walk(t, prefix):

@@ -11,8 +11,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Iterator, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig

@@ -1,0 +1,223 @@
+"""SLO autopilot + chaos stream: decision-engine unit tests, seeded
+chaos determinism, scheduler boost reordering, and end-to-end autopilot
+run reproducibility."""
+
+from repro.core.autopilot import (AppSignal, AutopilotConfig,
+                                  AutopilotPolicy, AutopilotView)
+from repro.core.chaos import build_chaos, chaos_events
+from repro.core.controller import RecoveryScheduler
+from repro.core.scenario import (ServerFail, ServerRejoin, SiteFail,
+                                 build_scenario)
+from repro.core.simulation import SimConfig, Simulation
+from repro.core.variants import Application, synthetic_family
+
+
+def _sim(**kw):
+    base = dict(n_sites=3, servers_per_site=4, headroom=0.2,
+                policy="faillite", seed=0)
+    base.update(kw)
+    return Simulation(SimConfig(**base)).setup()
+
+
+def _app(aid, rate, critical=False):
+    return Application(id=aid, family=f"fam-{aid}",
+                       variants=synthetic_family(f"fam-{aid}", 2e9),
+                       request_rate=rate, critical=critical)
+
+
+def _view(apps, rates, *, now=0.0, warm=None, fails=(), pilot=None):
+    prot = (pilot.protected if pilot is not None
+            and pilot.protected is not None else None)
+    return AutopilotView(
+        now=now, apps={a.id: a for a in apps},
+        warm_ids=set(warm if warm is not None
+                     else (prot or [a.id for a in apps if a.critical])),
+        signals={aid: AppSignal(rate=r) for aid, r in rates.items()},
+        fail_times=list(fails))
+
+
+# ---------------------------------------------------------------------------
+# chaos stream
+# ---------------------------------------------------------------------------
+
+def test_chaos_scenario_deterministic_and_valid():
+    sim = _sim()
+    a = build_scenario("chaos", sim.cluster, sim.apps, seed=3)
+    b = build_scenario("chaos", sim.cluster, sim.apps, seed=3)
+    assert [repr(e) for e in a.events] == [repr(e) for e in b.events]
+    assert a.horizon == b.horizon
+    a.validate(sim.cluster)
+    c = build_scenario("chaos", sim.cluster, sim.apps, seed=4)
+    assert [repr(e) for e in a.events] != [repr(e) for e in c.events]
+
+
+def test_chaos_every_crash_gets_a_rejoin():
+    sim = _sim()
+    import random
+    for seed in range(5):
+        sc = build_chaos(sim.cluster, random.Random(seed))
+        downs = [e for e in sc.events
+                 if isinstance(e, (ServerFail, SiteFail))]
+        rejoins = [e for e in sc.events if isinstance(e, ServerRejoin)]
+        assert downs, f"seed {seed}: stream must contain a failure"
+        n_crashed = sum(
+            len(sim.cluster.sites[e.site]) if isinstance(e, SiteFail)
+            else 1 for e in downs)
+        assert len(rejoins) == n_crashed
+        assert sc.horizon >= max(e.t for e in sc.events)
+
+
+def test_chaos_respects_max_down_fraction():
+    sim = _sim()
+    import random
+    from repro.core.chaos import ChaosConfig
+    cfg = ChaosConfig(duration=300.0, mean_gap_s=1.0)
+    n = len(sim.cluster.servers)
+    for seed in range(3):
+        events = chaos_events(sim.cluster, random.Random(seed), cfg)
+        down_until = {sid: 0.0 for sid in sim.cluster.servers}
+        for e in sorted(events, key=lambda e: e.t):
+            if isinstance(e, ServerFail):
+                down_until[e.server] = float("inf")
+            elif isinstance(e, SiteFail):
+                for sid in sim.cluster.sites[e.site]:
+                    down_until[sid] = float("inf")
+            elif isinstance(e, ServerRejoin):
+                down_until[e.server] = 0.0
+            n_down = sum(1 for v in down_until.values() if v > e.t)
+            assert n_down <= cfg.max_down_frac * n + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# decision engine
+# ---------------------------------------------------------------------------
+
+def test_autopilot_promotes_hot_app_within_static_budget():
+    apps = [_app("crit", 5.0, critical=True), _app("hot", 1.0),
+            _app("cold", 0.5)]
+    pilot = AutopilotPolicy()
+    # observed traffic inverts the configured picture: "hot" dominates
+    dec = pilot.decide(_view(apps, {"crit": 0.1, "hot": 50.0,
+                                    "cold": 0.2}))
+    assert dec.budget == 1                 # one critical app = one slot
+    assert dec.protected == ["hot"]
+    assert dec.promote == ["hot"] and dec.demote == ["crit"]
+
+
+def test_autopilot_hysteresis_keeps_incumbent_on_small_edge():
+    apps = [_app("a", 5.0, critical=True), _app("b", 1.0)]
+    pilot = AutopilotPolicy(AutopilotConfig(rate_ewma=1.0))
+    pilot.decide(_view(apps, {"a": 10.0, "b": 1.0}))
+    # challenger 5% ahead: inside the 15% swap margin -> no move
+    dec = pilot.decide(_view(apps, {"a": 10.0, "b": 10.5}))
+    assert dec.protected == ["a"] and not dec.demote
+
+
+def test_autopilot_move_cap_limits_swaps_per_sweep():
+    apps = ([_app(f"c{i}", 1.0, critical=True) for i in range(4)]
+            + [_app(f"n{i}", 1.0) for i in range(4)])
+    pilot = AutopilotPolicy(AutopilotConfig(rate_ewma=1.0, max_moves=2))
+    rates = {f"c{i}": 1.0 for i in range(4)}
+    rates.update({f"n{i}": 100.0 for i in range(4)})
+    dec = pilot.decide(_view(apps, rates))
+    assert len(dec.promote) == 2           # capped despite 4 challengers
+    assert len(dec.protected) == 4         # budget still filled
+
+
+def test_autopilot_replication_bumps_with_hazard():
+    apps = [_app("a", 1.0, critical=True)]
+    pilot = AutopilotPolicy()
+    calm = pilot.decide(_view(apps, {"a": 1.0}, now=100.0))
+    assert calm.hazard == 0 and calm.replication == 2
+    hot = pilot.decide(_view(apps, {"a": 1.0}, now=100.0,
+                             fails=[80.0, 85.0, 95.0]))
+    assert hot.hazard == 3 and hot.replication == 4
+    mild = pilot.decide(_view(apps, {"a": 1.0}, now=100.0,
+                              fails=[95.0]))
+    assert mild.replication == 3
+
+
+def test_autopilot_trough_shrinks_budget_and_snaps_back():
+    cfg = AutopilotConfig(diurnal_amplitude=0.5, diurnal_period=100.0,
+                          lead_s=5.0, calm_frac=0.5)
+    apps = [_app(f"c{i}", 1.0, critical=True) for i in range(4)]
+    pilot = AutopilotPolicy(cfg)
+    rates = {a.id: 1.0 for a in apps}
+    # find a trough instant and a peak instant of the diurnal model
+    trough_t = min((pilot._factor(t), t)
+                   for t in range(0, 100, 5))[1]
+    peak_t = max((pilot._factor(t), t) for t in range(0, 100, 5))[1]
+    assert pilot.in_trough(trough_t) and not pilot.in_trough(peak_t)
+    low = pilot.decide(_view(apps, rates, now=trough_t))
+    assert low.budget == 2                 # ceil(4 * 0.5)
+    full = pilot.decide(_view(apps, rates, now=peak_t))
+    assert full.budget == 4
+    # hazard overrides the trough: never shed protection mid-incident
+    risky = pilot.decide(_view(apps, rates, now=trough_t,
+                               fails=[trough_t - 1.0]))
+    assert risky.budget == 4
+
+
+# ---------------------------------------------------------------------------
+# scheduler boosts
+# ---------------------------------------------------------------------------
+
+class _RecordingExecutor:
+    """Stub executor: records dispatch order, completes on demand."""
+
+    def __init__(self):
+        self.order = []
+        self.pending = []
+
+    def load(self, app, variant, server_id, on_ready):
+        self.order.append(app.id)
+        self.pending.append(on_ready)
+        return None
+
+
+def test_scheduler_boosts_reorder_criticality_drain():
+    ex = _RecordingExecutor()
+    sched = RecoveryScheduler(ex, mode="criticality")
+    sched.set_boosts({"slow": 100.0})
+    apps = [_app("first", 9.0), _app("fast", 5.0), _app("slow", 1.0)]
+    for a in apps:
+        sched.submit(a, a.smallest, "s0", lambda t: None)
+    # "first" dispatched immediately; completing it must drain the
+    # boosted low-rate app before the higher-rate unboosted one
+    assert ex.order == ["first"]
+    ex.pending[0](1.0)
+    ex.pending[1](2.0)
+    assert ex.order == ["first", "slow", "fast"]
+
+
+def test_scheduler_without_boosts_keeps_rate_order():
+    ex = _RecordingExecutor()
+    sched = RecoveryScheduler(ex, mode="criticality")
+    apps = [_app("first", 9.0), _app("fast", 5.0), _app("slow", 1.0)]
+    for a in apps:
+        sched.submit(a, a.smallest, "s0", lambda t: None)
+    ex.pending[0](1.0)
+    ex.pending[1](2.0)
+    assert ex.order == ["first", "fast", "slow"]
+
+
+# ---------------------------------------------------------------------------
+# end to end
+# ---------------------------------------------------------------------------
+
+def test_autopilot_chaos_run_is_deterministic():
+    def run():
+        sim = _sim(autopilot=True, traffic_diurnal_amplitude=0.5,
+                   traffic_diurnal_period=120.0)
+        return sim.run_named_scenario("chaos").fingerprint()
+
+    assert run() == run()
+
+
+def test_autopilot_off_path_has_no_policy_attached():
+    sim = _sim()
+    assert sim.controller.autopilot is None
+    on = _sim(autopilot=True)
+    assert on.controller.autopilot is not None
+    # before the first sweep the static criticality rule still applies
+    assert on.controller.autopilot.protected is None

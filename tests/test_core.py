@@ -2,14 +2,12 @@
 invariants (capacity feasibility, anti-affinity, α-reserve, ILP vs
 heuristic dominance)."""
 
-import math
 import random
 
 import pytest
 
-from repro.core.cluster import Cluster, RESOURCES, Server, make_cluster
-from repro.core.planner import (faillite_heuristic, match,
-                                solve_warm_placement)
+from repro.core.cluster import make_cluster
+from repro.core.planner import faillite_heuristic, solve_warm_placement
 from repro.core.variants import (Application, Variant, build_ladder,
                                  synthetic_family)
 

@@ -5,7 +5,6 @@ docs job, tools/check_docs.py)."""
 import sys
 from pathlib import Path
 
-import pytest
 
 ROOT = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(ROOT / "tools"))

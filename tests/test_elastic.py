@@ -14,7 +14,9 @@ def test_checkpoint_restores_onto_different_mesh(tmp_path):
     code = f"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from repro import configs
 from repro.models import model as MDL
 from repro.parallel import sharding as SH

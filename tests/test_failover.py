@@ -1,9 +1,7 @@
 """End-to-end failover behaviour in the discrete-event simulator:
 FailLite vs baselines, progressive upgrade, site failures, reclamation."""
 
-import math
 
-import pytest
 
 from repro.core.simulation import SimConfig, Simulation
 
@@ -139,7 +137,7 @@ def test_replan_lost_backups():
     warm_srvs = {sid for (_, sid, _) in sim.controller.warm.values()}
     victim = next(iter(warm_srvs))
     sim.inject_failure(servers=[victim])
-    replanned = sim.controller.replan_lost_backups()
+    sim.controller.replan_lost_backups()
     # every critical app with a live primary has warm protection again
     for app in sim.apps:
         p = sim.controller.primaries.get(app.id)

@@ -4,22 +4,19 @@ fingerprint pinning that proves the default config is bit-identical to
 the pre-model-state behavior."""
 
 import hashlib
-import math
 
 import pytest
 
 from repro.core.cluster import make_cluster
-from repro.core.controller import (FailLiteController, LoadExecutor,
-                                   RecoveryScheduler)
+from repro.core.controller import LoadExecutor, RecoveryScheduler
 from repro.core.heartbeat import SimClock
 from repro.core.modelstate import (CLOUD, LOCAL, PEER, LoadCostModel,
                                    ModelRegistry, StorageConfig,
                                    storage_preset)
-from repro.core.scenario import SCENARIOS, LinkDegrade, Scenario, SiteFail
+from repro.core.scenario import SCENARIOS
 from repro.core.simulation import (EventQueue, SimConfig, SimLoadExecutor,
                                    Simulation)
-from repro.core.variants import (Application, Variant, WARMUP_S,
-                                 synthetic_family)
+from repro.core.variants import Application, WARMUP_S, synthetic_family
 
 # ---------------------------------------------------------------------------
 # golden fingerprint pinning
@@ -61,7 +58,9 @@ def test_golden_scenario_fingerprints(name):
 
 def test_golden_covers_every_pre_modelstate_scenario():
     # every named scenario that predates the model-state plane is pinned
-    assert set(GOLDEN_FINGERPRINTS) == set(SCENARIOS) - {"cold-load-storm"}
+    # (cold-load-storm arrived with it, chaos with the soak harness)
+    assert set(GOLDEN_FINGERPRINTS) == (set(SCENARIOS)
+                                        - {"cold-load-storm", "chaos"})
 
 
 # ---------------------------------------------------------------------------

@@ -4,9 +4,8 @@ re-protection loop."""
 
 import pytest
 
-from repro.core.scenario import (SCENARIOS, AppArrival, AppDeparture,
-                                 LoadSpike, Scenario, ServerFail,
-                                 ServerRejoin, SiteFail, build_scenario)
+from repro.core.scenario import (
+    SCENARIOS, AppArrival, AppDeparture, Scenario, ServerFail, ServerRejoin, build_scenario)
 from repro.core.simulation import SimConfig, Simulation, run_scenario_suite
 
 REQUIRED = ["single-server", "site-outage", "cascade",

@@ -1,8 +1,6 @@
 """Serving runtime: engine consistency, router semantics, and a compact
 real-failure testbed integration test."""
 
-import threading
-import time
 
 import jax
 import jax.numpy as jnp

@@ -28,7 +28,6 @@ def test_param_specs_cover_all_archs():
     big tensors are actually sharded on the production mesh."""
     from repro import configs
     from repro.models import model as MDL
-    mesh = FakeMesh({"data": 16, "model": 16})
     for arch in ["qwen2.5-3b", "rwkv6-3b", "recurrentgemma-2b",
                  "whisper-medium", "qwen3-moe-30b-a3b"]:
         cfg = configs.get_smoke(arch)

@@ -8,12 +8,10 @@ import math
 import numpy as np
 import pytest
 
-from repro.core.scenario import (LoadSpike, Scenario, ServerFail,
-                                 ServerRejoin)
+from repro.core.scenario import LoadSpike, Scenario, ServerFail
 from repro.core.simulation import SimConfig, Simulation
-from repro.core.traffic import (TrafficConfig, TrafficPlane,
-                                diurnal_arrival_times, diurnal_factor,
-                                poisson_arrival_times)
+from repro.core.traffic import (
+    diurnal_arrival_times, diurnal_factor, poisson_arrival_times)
 from repro.core.variants import Application, synthetic_family
 
 

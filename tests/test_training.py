@@ -2,7 +2,6 @@
 elastic restore, deterministic seekable data."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,0 +1,148 @@
+"""Trend gate + RunResult JSON schema: the CI regression net.
+
+Loads tools/check_trend.py by path (tools/ is not a package) and
+exercises the comparator's contract: an identical trend passes,
+an injected p99 regression fails, in-band noise is tolerated, the
+no-data sentinel rules hold, and a gate that matches zero rows fails
+rather than passing vacuously. Also pins the RunResult JSON schema the
+soak rows are built from."""
+
+import copy
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def _load_tool(name):
+    spec = importlib.util.spec_from_file_location(
+        name, ROOT / "tools" / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[name] = mod    # dataclasses resolve via sys.modules
+    spec.loader.exec_module(mod)
+    return mod
+
+
+CT = _load_tool("check_trend")
+
+
+def _soak_doc(**overrides):
+    rows = [
+        {"seed": 0, "controller": "static", "goodput": 0.95,
+         "availability": 0.99, "client_p99_ms": 800.0,
+         "recovery_rate": 1.0, "warm_bytes_mean": 4.0e9},
+        {"seed": 0, "controller": "autopilot", "goodput": 0.96,
+         "availability": 0.992, "client_p99_ms": 500.0,
+         "recovery_rate": 1.0, "warm_bytes_mean": 3.5e9},
+    ]
+    doc = {"bench": "soak", "per_seed": rows}
+    doc.update(overrides)
+    return doc
+
+
+# ---------------------------------------------------------------------------
+# comparator contract
+# ---------------------------------------------------------------------------
+
+def test_identical_trend_passes():
+    doc = _soak_doc()
+    fails, matched = CT.compare(doc, copy.deepcopy(doc))
+    assert not fails and matched == 2
+
+
+def test_injected_p99_regression_fails():
+    cur = _soak_doc()
+    cur["per_seed"][1]["client_p99_ms"] *= 2.0   # way past the 25% band
+    fails, _ = CT.compare(_soak_doc(), cur)
+    assert any("client_p99_ms" in f for f in fails)
+
+
+def test_in_band_noise_is_tolerated():
+    cur = _soak_doc()
+    cur["per_seed"][1]["client_p99_ms"] *= 1.05  # inside the 25% band
+    cur["per_seed"][0]["goodput"] *= 0.99        # inside the 2% band
+    fails, matched = CT.compare(_soak_doc(), cur)
+    assert not fails and matched == 2
+
+
+def test_improvements_always_pass():
+    cur = _soak_doc()
+    cur["per_seed"][1]["client_p99_ms"] = 100.0
+    cur["per_seed"][0]["goodput"] = 0.999
+    fails, _ = CT.compare(_soak_doc(), cur)
+    assert not fails
+
+
+def test_sentinel_rules():
+    # sentinel -> sentinel: fine (metric had no data in either run)
+    ref, cur = _soak_doc(), _soak_doc()
+    ref["per_seed"][0]["client_p99_ms"] = -1.0
+    cur["per_seed"][0]["client_p99_ms"] = -1.0
+    fails, _ = CT.compare(ref, cur)
+    assert not fails
+    # data -> sentinel: the benchmark lost its signal = regression
+    cur["per_seed"][1]["client_p99_ms"] = -1.0
+    fails, _ = CT.compare(ref, cur)
+    assert any("lost its data" in f for f in fails)
+    # sentinel -> data: an improvement, never a failure
+    ref2, cur2 = _soak_doc(), _soak_doc()
+    ref2["per_seed"][0]["client_p99_ms"] = -1.0
+    cur2["per_seed"][0]["client_p99_ms"] = 9999.0
+    fails, _ = CT.compare(ref2, cur2)
+    assert not fails
+
+
+def test_zero_matched_rows_is_a_failure():
+    cur = _soak_doc()
+    for row in cur["per_seed"]:
+        row["seed"] = 77                   # no identity overlap
+    fails, matched = CT.compare(_soak_doc(), cur)
+    assert matched == 0 and fails
+
+
+def test_bench_kind_mismatch_fails():
+    cur = _soak_doc(bench="mttr")
+    fails, _ = CT.compare(_soak_doc(), cur)
+    assert any("mismatch" in f for f in fails)
+
+
+def test_committed_trend_files_self_compare_green():
+    for name in ("BENCH_soak.json", "BENCH_mttr_smoke.json",
+                 "BENCH_planner_smoke.json"):
+        doc = json.loads((ROOT / name).read_text())
+        fails, matched = CT.compare(doc, copy.deepcopy(doc))
+        assert not fails and matched > 0, (name, fails)
+
+
+# ---------------------------------------------------------------------------
+# RunResult JSON schema
+# ---------------------------------------------------------------------------
+
+def test_runresult_json_roundtrip_schema():
+    from repro.experiment import ExperimentSpec, run_experiment
+
+    spec = ExperimentSpec.smoke("sim")
+    doc = run_experiment(spec).to_json_dict()
+    # the document must survive a strict JSON round-trip unchanged
+    assert json.loads(json.dumps(doc)) == doc
+    for key in ("row", "per_epoch", "overall", "records", "traffic",
+                "traffic_per_epoch", "protection"):
+        assert key in doc, key
+    for key in ("availability", "goodput", "n_offered"):
+        assert key in doc["traffic"], key
+    for key in ("warm_bytes_mean", "warm_bytes_final", "n_warm_mean",
+                "n_warm_final"):
+        assert key in doc["protection"], key
+
+
+def test_soak_rows_carry_every_gated_metric():
+    """Every metric the soak trend gate checks must exist in the rows
+    tools/soak.py emits — a renamed key would silently skip the gate."""
+    soak = _load_tool("soak")
+    row, _ = soak.run_one(0, "static")
+    gated = {m.key for m in CT.SPECS["soak"].metrics}
+    assert gated <= set(row), gated - set(row)
+    assert set(CT.SPECS["soak"].id_keys) <= set(row)

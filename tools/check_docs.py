@@ -28,7 +28,7 @@ from typing import List, Tuple
 ROOT = Path(__file__).resolve().parents[1]
 
 SNIPPET_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/SCENARIOS.md",
-                 "docs/PLANNER.md", "docs/EXPERIMENTS.md"]
+                 "docs/PLANNER.md", "docs/EXPERIMENTS.md", "docs/CI.md"]
 LINK_FILES_GLOB = ["*.md", "docs/*.md"]
 
 FENCE_RE = re.compile(r"^```python\s*$")

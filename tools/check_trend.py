@@ -1,0 +1,183 @@
+#!/usr/bin/env python
+"""Tolerance-band trend gate: current benchmark vs committed trend.
+
+CI runs a benchmark (tools/soak.py, tools/bench_mttr.py,
+tools/bench_planner.py), then compares its JSON output against the
+trend file committed in the repo:
+
+    PYTHONPATH=src python tools/check_trend.py \
+        --trend BENCH_soak.json --current soak_ci.json
+
+Rows are matched by identity keys (seed+controller for soak, the
+policy/planner/scheduler cell for mttr, the scale point for planner);
+each matched row's metrics are compared directionally inside a
+tolerance band — a HIGHER-is-better metric fails when the current
+value drops below ``ref - max(abs_tol, rel_tol * |ref|)``, a
+LOWER-is-better metric fails when it climbs above the mirrored bound,
+an EQUAL metric fails on any difference. The repo-wide ``-1.0``
+no-data sentinel is honored: sentinel->sentinel passes,
+data->sentinel is a regression (the benchmark lost its signal),
+sentinel->data is an improvement. Wall-clock fields are either
+excluded or given very loose bands (machine-dependent); the sim
+metrics themselves are deterministic and machine-independent, so CI
+rows match the committed trend exactly until a code change moves them.
+
+Exit status: 0 = inside every band, 1 = regression (or nothing
+matched — a gate that compares zero rows must not pass vacuously).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+SENTINEL = -1.0
+
+
+@dataclass(frozen=True)
+class Metric:
+    """One gated column: direction + tolerance band."""
+    key: str
+    direction: str                 # "higher" | "lower" | "equal"
+    rel_tol: float = 0.0
+    abs_tol: float = 0.0
+
+
+@dataclass(frozen=True)
+class BenchSpec:
+    """How to gate one benchmark document."""
+    rows_key: str                  # where the row list lives in the doc
+    id_keys: Tuple[str, ...]       # row identity (match key)
+    metrics: Tuple[Metric, ...]
+
+
+SPECS: Dict[str, BenchSpec] = {
+    # per-seed soak rows: deterministic sim, so bands only absorb
+    # intentional code-change drift reviewed alongside the trend update
+    "soak": BenchSpec(
+        rows_key="per_seed",
+        id_keys=("seed", "controller"),
+        metrics=(
+            Metric("goodput", "higher", rel_tol=0.02, abs_tol=0.005),
+            Metric("availability", "higher", abs_tol=0.005),
+            Metric("client_p99_ms", "lower", rel_tol=0.25, abs_tol=50.0),
+            Metric("recovery_rate", "higher", abs_tol=0.02),
+            Metric("warm_bytes_mean", "lower", rel_tol=0.10,
+                   abs_tol=0.5e9),
+        )),
+    # bench_mttr cells (policy x planner x scheduler)
+    "mttr": BenchSpec(
+        rows_key="cells",
+        id_keys=("policy", "planner", "scheduler"),
+        metrics=(
+            Metric("recovery_rate", "higher", abs_tol=0.02),
+            Metric("ctl_mttr_ms", "lower", rel_tol=0.15, abs_tol=10.0),
+            Metric("client_p99_ms", "lower", rel_tol=0.20, abs_tol=25.0),
+        )),
+    # bench_planner heuristic points: parity/placements are exact;
+    # speedup is wall-clock and machine-dependent -> very loose band
+    "planner": BenchSpec(
+        rows_key="heuristic",
+        id_keys=("n_apps", "n_servers"),
+        metrics=(
+            Metric("parity", "equal"),
+            Metric("vectorized_placed", "equal"),
+            Metric("vectorized_objective", "higher", rel_tol=1e-9,
+                   abs_tol=1e-6),
+            Metric("speedup", "higher", rel_tol=0.8),
+        )),
+}
+
+
+def compare_rows(ref: dict, cur: dict, spec: BenchSpec,
+                 label: str) -> List[str]:
+    fails: List[str] = []
+    for m in spec.metrics:
+        if m.key not in ref or m.key not in cur:
+            continue                   # metric absent on either side
+        r, c = ref[m.key], cur[m.key]
+        if m.direction == "equal":
+            if r != c:
+                fails.append(f"{label}: {m.key} changed {r!r} -> {c!r}")
+            continue
+        r, c = float(r), float(c)
+        if r == SENTINEL and c == SENTINEL:
+            continue
+        if r != SENTINEL and c == SENTINEL:
+            fails.append(f"{label}: {m.key} lost its data "
+                         f"({r} -> no-data sentinel)")
+            continue
+        if r == SENTINEL:
+            continue                   # data appeared: an improvement
+        band = max(m.abs_tol, m.rel_tol * abs(r))
+        if m.direction == "higher" and c < r - band:
+            fails.append(f"{label}: {m.key} regressed {r} -> {c} "
+                         f"(band -{band:g})")
+        elif m.direction == "lower" and c > r + band:
+            fails.append(f"{label}: {m.key} regressed {r} -> {c} "
+                         f"(band +{band:g})")
+    return fails
+
+
+def compare(trend: dict, current: dict) -> Tuple[List[str], int]:
+    """(failures, n_matched). Zero matched rows is itself a failure."""
+    bench = trend.get("bench")
+    if bench != current.get("bench"):
+        return ([f"bench mismatch: trend={bench!r} "
+                 f"current={current.get('bench')!r}"], 0)
+    if bench not in SPECS:
+        return ([f"no gate spec for bench {bench!r}; "
+                 f"have {sorted(SPECS)}"], 0)
+    spec = SPECS[bench]
+
+    def index(doc):
+        rows = doc.get(spec.rows_key, [])
+        return {tuple(row.get(k) for k in spec.id_keys): row
+                for row in rows}
+
+    ref_rows, cur_rows = index(trend), index(current)
+    fails: List[str] = []
+    matched = 0
+    for key, cur in sorted(cur_rows.items(), key=lambda kv: str(kv[0])):
+        ref = ref_rows.get(key)
+        label = f"{bench}[" + ",".join(f"{k}={v}" for k, v
+                                       in zip(spec.id_keys, key)) + "]"
+        if ref is None:
+            print(f"note {label}: new row, no trend baseline")
+            continue
+        matched += 1
+        fails += compare_rows(ref, cur, spec, label)
+    if matched == 0:
+        fails.append(f"no {bench!r} rows matched the trend — "
+                     f"the gate compared nothing")
+    return fails, matched
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trend", required=True,
+                    help="committed trend JSON (the baseline)")
+    ap.add_argument("--current", required=True,
+                    help="freshly produced benchmark JSON")
+    args = ap.parse_args()
+
+    trend = json.loads(Path(args.trend).read_text())
+    current = json.loads(Path(args.current).read_text())
+    fails, matched = compare(trend, current)
+    if fails:
+        print(f"\nTREND GATE FAILED ({len(fails)} regression(s), "
+              f"{matched} row(s) compared):")
+        for f in fails:
+            print(f"  {f}")
+        return 1
+    print(f"trend gate ok: {matched} row(s) inside every band "
+          f"({args.current} vs {args.trend})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

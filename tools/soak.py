@@ -1,0 +1,197 @@
+#!/usr/bin/env python
+"""Randomized chaos soak -> BENCH_soak.json trend file.
+
+Runs the seeded "chaos" scenario stream (core/chaos.py) through the
+experiment API across N seeds, once per controller flavor — ``static``
+(the fixed criticality rule) and ``autopilot`` (the adaptive-protection
+loop, core/autopilot.py) — on the "edge" storage preset with diurnal
+traffic, and folds each `RunResult.to_json_dict()` into one JSON
+document: per-seed rows plus pooled p50/p99 client-MTTR, availability,
+accuracy-weighted goodput, and warm-replica headroom aggregates.
+
+    PYTHONPATH=src python tools/soak.py --seeds 0:20   # refresh trend
+    PYTHONPATH=src python tools/soak.py --seeds 0:4 \
+        --out soak_ci.json --dump-dir soak_dumps       # CI subset
+    PYTHONPATH=src python tools/soak.py --seeds 0:20 --check-win
+
+The sim is deterministic and machine-independent, so per-seed rows are
+exactly reproducible anywhere — `tools/check_trend.py` compares a CI
+run's rows against the committed trend inside tolerance bands.
+`--check-win` exits non-zero unless the autopilot beats the static
+policy on pooled p99 client MTTR or goodput at equal-or-lower mean warm
+headroom — the tentpole's acceptance gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+CONTROLLERS = ("static", "autopilot")
+
+# one soak cell: a mid-size edge fleet under diurnal traffic on the
+# constrained storage preset, recovery drained by criticality
+SOAK_SPEC = dict(
+    scenario="chaos", policy="faillite", storage="edge",
+    scheduler="criticality", n_sites=3, servers_per_site=4,
+    headroom=0.2, traffic_diurnal_amplitude=0.5,
+    traffic_diurnal_period=120.0, settle_s=20.0)
+
+
+def parse_seeds(text: str) -> List[int]:
+    """"0:20" (half-open range) or "0,3,7" (explicit list)."""
+    if ":" in text:
+        lo, hi = (int(x) for x in text.split(":", 1))
+        return list(range(lo, hi))
+    return [int(s) for s in text.split(",") if s.strip()]
+
+
+def run_one(seed: int, controller: str,
+            dump_dir: Optional[Path] = None) -> Tuple[dict, List[float]]:
+    from repro.experiment import ExperimentSpec, run_experiment
+
+    spec = ExperimentSpec(seed=seed, autopilot=(controller == "autopilot"),
+                          **SOAK_SPEC)
+    res = run_experiment(spec)
+    if dump_dir is not None:
+        dump_dir.mkdir(parents=True, exist_ok=True)
+        doc = {"spec": spec.to_dict(), **res.to_json_dict()}
+        (dump_dir / f"soak_s{seed}_{controller}.json").write_text(
+            json.dumps(doc, indent=1) + "\n")
+
+    t = res.traffic
+    downs = [w.client_downtime for w in t.windows
+             if w.recovered and math.isfinite(w.client_downtime)]
+    prot = res.extras.get("protection", {})
+    row = {
+        "seed": seed,
+        "controller": controller,
+        "recovery_rate": round(res.overall.get("recovery_rate", 1.0), 4),
+        "availability": round(t.availability, 6),
+        "goodput": round(t.goodput, 6),
+        "n_offered": t.n_offered,
+        "n_windows": t.n_windows,
+        "n_unrecovered": t.n_unrecovered_windows,
+        "client_p50_ms": _pct_ms(downs, 50),
+        "client_p99_ms": _pct_ms(downs, 99),
+        "warm_bytes_mean": round(prot.get("warm_bytes_mean", 0.0), 1),
+        "n_warm_mean": round(prot.get("n_warm_mean", 0.0), 3),
+    }
+    return row, downs
+
+
+def _pct_ms(vals: List[float], q: float) -> float:
+    import numpy as np
+
+    if not vals:
+        return -1.0                      # repo-wide no-data sentinel
+    return round(float(np.percentile(np.asarray(vals), q)) * 1e3, 3)
+
+
+def _mean(vals: List[float]) -> float:
+    return sum(vals) / len(vals) if vals else 0.0
+
+
+def aggregate(rows: List[dict], downs: List[float]) -> dict:
+    """Pooled percentiles + mean per-seed metrics for one controller."""
+    return {
+        "n_seeds": len(rows),
+        "client_p50_ms": _pct_ms(downs, 50),
+        "client_p99_ms": _pct_ms(downs, 99),
+        "availability_mean": round(_mean([r["availability"]
+                                          for r in rows]), 6),
+        "goodput_mean": round(_mean([r["goodput"] for r in rows]), 6),
+        "recovery_rate_mean": round(_mean([r["recovery_rate"]
+                                           for r in rows]), 4),
+        "warm_bytes_mean": round(_mean([r["warm_bytes_mean"]
+                                        for r in rows]), 1),
+        "n_windows": sum(r["n_windows"] for r in rows),
+        "n_unrecovered": sum(r["n_unrecovered"] for r in rows),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_soak.json")
+    ap.add_argument("--seeds", default="0:20",
+                    help='"lo:hi" half-open range or comma list')
+    ap.add_argument("--dump-dir", default=None, metavar="DIR",
+                    help="write every RunResult JSON dump here "
+                         "(CI uploads them as artifacts)")
+    ap.add_argument("--check-win", action="store_true",
+                    help="fail unless autopilot beats static on p99 "
+                         "client MTTR or goodput at <= warm headroom")
+    args = ap.parse_args()
+
+    seeds = parse_seeds(args.seeds)
+    dump_dir = Path(args.dump_dir) if args.dump_dir else None
+
+    per_seed: List[dict] = []
+    pooled = {c: [] for c in CONTROLLERS}
+    for seed in seeds:
+        for controller in CONTROLLERS:
+            row, downs = run_one(seed, controller, dump_dir)
+            per_seed.append(row)
+            pooled[controller] += downs
+            print(f"soak,seed={seed},{controller},"
+                  f"p99={row['client_p99_ms']}ms,"
+                  f"avail={row['availability']:.4f},"
+                  f"goodput={row['goodput']:.4f},"
+                  f"warm={row['warm_bytes_mean']/1e9:.1f}GB", flush=True)
+
+    cells = {c: aggregate([r for r in per_seed if r["controller"] == c],
+                          pooled[c]) for c in CONTROLLERS}
+    st, ap_ = cells["static"], cells["autopilot"]
+    comparison = {
+        "p99_ratio_static_over_autopilot": (
+            round(st["client_p99_ms"] / ap_["client_p99_ms"], 3)
+            if ap_["client_p99_ms"] > 0 else -1.0),
+        "goodput_delta": round(ap_["goodput_mean"] - st["goodput_mean"],
+                               6),
+        "availability_delta": round(ap_["availability_mean"]
+                                    - st["availability_mean"], 6),
+        "warm_bytes_ratio": (
+            round(ap_["warm_bytes_mean"] / st["warm_bytes_mean"], 4)
+            if st["warm_bytes_mean"] > 0 else -1.0),
+    }
+    doc = {
+        "bench": "soak",
+        "description": "seeded chaos-stream soak: static vs autopilot "
+                       "protection on the 'edge' preset with diurnal "
+                       "traffic; per-seed rows are exactly reproducible "
+                       "(deterministic sim), pooled percentiles over "
+                       "all client downtime windows",
+        "config": SOAK_SPEC,
+        "seeds": seeds,
+        "unit": "milliseconds",
+        "per_seed": per_seed,
+        "cells": cells,
+        "autopilot_vs_static": comparison,
+    }
+    Path(args.out).write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {args.out} (p99 ratio "
+          f"{comparison['p99_ratio_static_over_autopilot']}x, "
+          f"goodput delta {comparison['goodput_delta']:+.4f}, "
+          f"warm ratio {comparison['warm_bytes_ratio']}x)")
+
+    if args.check_win:
+        wins = (comparison["p99_ratio_static_over_autopilot"] > 1.0
+                or comparison["goodput_delta"] > 0.0)
+        cheaper = (comparison["warm_bytes_ratio"] >= 0
+                   and comparison["warm_bytes_ratio"] <= 1.0)
+        if not (wins and cheaper):
+            print(f"FAIL: autopilot must win on p99 or goodput at "
+                  f"equal-or-lower warm headroom; got {comparison}")
+            return 1
+        print("ok: autopilot wins at equal-or-lower warm headroom")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
