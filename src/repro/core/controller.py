@@ -178,6 +178,41 @@ class RecoveryScheduler:
         # empty by default, so the priority tuple's boost slot is 0.0
         # for every app and the historical ordering is untouched
         self.boosts: Dict[str, float] = {}
+        # resilience-layer hook: ("start"|"end", t) fired when the
+        # number of outstanding recovery loads crosses 0<->1, so the
+        # traffic plane can admission-control during the drain. None
+        # (the default) leaves every submission path bit-identical
+        self.drain_observer: Optional[Callable[[str, float], None]] = None
+        self._drain_active = 0
+
+    def _now(self) -> float:
+        return self.clock.now() if self.clock is not None else 0.0
+
+    def _drain_begin(self):
+        self._drain_active += 1
+        if self._drain_active == 1:
+            self.drain_observer("start", self._now())
+
+    def _drain_end(self):
+        self._drain_active = max(0, self._drain_active - 1)
+        if self._drain_active == 0:
+            self.drain_observer("end", self._now())
+
+    def _tracked(self, on_ready: Callable[[float], None]
+                 ) -> Callable[[float], None]:
+        """Wrap a completion callback with drain accounting — only when
+        an observer is installed (zero off-path change)."""
+        if self.drain_observer is None:
+            return on_ready
+        self._drain_begin()
+
+        def wrapped(t_ready: float):
+            try:
+                on_ready(t_ready)
+            finally:
+                self._drain_end()
+
+        return wrapped
 
     def set_boosts(self, boosts: Dict[str, float]):
         """Reorder future drains by per-app boost (higher first); only
@@ -197,10 +232,10 @@ class RecoveryScheduler:
         serving), 1 = progressive upgrade (quality, not availability) —
         upgrades never delay restores in criticality mode."""
         item = _PendingLoad(self.priority(app, stage), app, variant,
-                            server_id, on_ready)
+                            server_id, self._tracked(on_ready))
         if self.mode == "fifo":
             item.ticket = self.executor.load(app, variant, server_id,
-                                             on_ready)
+                                             item.on_ready)
             return item
         if self.clock is not None:
             item.t_submit = self.clock.now()
@@ -244,8 +279,15 @@ class RecoveryScheduler:
     def reset_server(self, server_id: str):
         """Server crashed/rejoined: drop its queue and in-flight marker
         (stale completions are ignored via identity checks)."""
-        self._queued.pop(server_id, None)
+        dropped = self._queued.pop(server_id, None)
         self._inflight.pop(server_id, None)
+        # queued-but-never-dispatched loads will never fire their
+        # (tracked) on_ready — close their drain accounting here. The
+        # in-flight load's completion event still fires and closes its
+        # own (the executor always invokes on_ready).
+        if dropped and self.drain_observer is not None:
+            for _ in dropped:
+                self._drain_end()
 
     def idle(self) -> bool:
         """No queued or in-flight recovery loads (fifo mode keeps no

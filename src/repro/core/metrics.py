@@ -46,7 +46,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -63,6 +63,10 @@ class DowntimeWindow:
     t_end: float = math.inf        # route restored (+notify); inf = never
     n_dropped: int = 0             # requests that arrived inside
     t_first_served: float = math.inf   # first served request after t_end
+    # warm backup serving this app during the window, as
+    # (accuracy, service_time) — set only when the resilience layer is
+    # on; hedged requests inside the window are served by it
+    backup: Optional[Tuple[float, float]] = None
 
     @property
     def recovered(self) -> bool:
@@ -95,6 +99,16 @@ class AppLog:
     slo_violated: np.ndarray       # bool (served but proxy > SLO)
     accuracy: np.ndarray           # serving accuracy (nan if not served)
     latency: np.ndarray            # latency proxy (nan if not served)
+    # resilience-layer outcomes (core/resilience.py); None on the
+    # historical off-path. hedged/retried are subsets of served;
+    # fast_failed/shed are terminal non-served classes disjoint from
+    # dropped — every offered request lands in exactly one of
+    # {served&~hedged&~retried, hedged, retried, dropped, fast_failed,
+    # shed} (pinned by tests/test_properties.py)
+    hedged: Optional[np.ndarray] = None       # served via warm backup
+    fast_failed: Optional[np.ndarray] = None  # breaker answered instantly
+    shed: Optional[np.ndarray] = None         # admission/bulkhead reject
+    retried: Optional[np.ndarray] = None      # served on post-restore retry
 
 
 def classify_app(app_id: str, arrivals: np.ndarray, rates: np.ndarray,
@@ -154,6 +168,11 @@ class TrafficSummary:
     downtime_total_s: float = 0.0
     n_windows: int = 0
     n_unrecovered_windows: int = 0
+    # resilience-layer outcome counters (all zero on the off-path)
+    n_hedged_win: int = 0
+    n_fast_failed: int = 0
+    n_shed: int = 0
+    n_retried: int = 0
     per_epoch: List[dict] = field(default_factory=list)
     windows: List[DowntimeWindow] = field(default_factory=list)
 
@@ -162,19 +181,25 @@ class TrafficSummary:
             "n_offered", "n_served", "n_dropped", "n_degraded",
             "n_slo_violated", "availability", "goodput", "latency_p50",
             "latency_p99", "client_mttr_avg", "downtime_total_s",
-            "n_windows", "n_unrecovered_windows")}
+            "n_windows", "n_unrecovered_windows", "n_hedged_win",
+            "n_fast_failed", "n_shed", "n_retried")}
 
     def fingerprint(self) -> tuple:
         """Deterministic digest for same-seed replay tests."""
         def r(x):
             return -1.0 if not math.isfinite(x) else round(float(x), 9)
-        return (self.n_offered, self.n_served, self.n_dropped,
+        base = (self.n_offered, self.n_served, self.n_dropped,
                 self.n_degraded, self.n_slo_violated,
                 r(self.availability), r(self.goodput),
                 r(self.latency_p50), r(self.latency_p99),
                 r(self.client_mttr_avg), r(self.downtime_total_s),
                 self.n_windows, self.n_unrecovered_windows,
                 tuple(tuple(sorted(e.items())) for e in self.per_epoch))
+        res = (self.n_hedged_win, self.n_fast_failed, self.n_shed,
+               self.n_retried)
+        # resilience-off runs keep the historical fingerprint shape
+        # bit-exact (golden pinning in tests/test_modelstate.py)
+        return base if res == (0, 0, 0, 0) else base + (res,)
 
     def epoch_row(self, epoch: int) -> dict:
         for e in self.per_epoch:
@@ -202,15 +227,40 @@ def aggregate(logs: List[AppLog], windows: List[DowntimeWindow],
               if w.recovered else log.arrivals.size)
         w.n_dropped = int(np.count_nonzero(log.dropped[lo:hi]))
         if w.recovered:
+            cand: List[float] = []
             after = np.nonzero(log.served & (log.arrivals >= w.t_end))[0]
             if after.size:
-                w.t_first_served = float(log.arrivals[after[0]])
+                cand.append(float(log.arrivals[after[0]]))
+            # resilience wins *inside* the window (hedged to the warm
+            # backup, or retried at restore) end the client-visible
+            # blackout at their completion instant, not at the first
+            # organic post-restore arrival
+            for name in ("hedged", "retried"):
+                mask = getattr(log, name)
+                if mask is None:
+                    continue
+                in_w = np.nonzero(mask[lo:hi])[0]
+                if in_w.size:
+                    i = lo + in_w
+                    cand.append(float(np.min(log.arrivals[i]
+                                             + log.latency[i])))
+            if cand:
+                w.t_first_served = min(cand)
 
     n_offered = sum(int(np.count_nonzero(l.offered)) for l in logs)
     n_served = sum(int(np.count_nonzero(l.served)) for l in logs)
     n_dropped = sum(int(np.count_nonzero(l.dropped)) for l in logs)
     n_degraded = sum(int(np.count_nonzero(l.degraded)) for l in logs)
     n_slo = sum(int(np.count_nonzero(l.slo_violated)) for l in logs)
+
+    def _count(name: str) -> int:
+        return sum(int(np.count_nonzero(getattr(l, name)))
+                   for l in logs if getattr(l, name) is not None)
+
+    n_hedged = _count("hedged")
+    n_fast_failed = _count("fast_failed")
+    n_shed = _count("shed")
+    n_retried = _count("retried")
 
     good = 0.0
     lat_all: List[np.ndarray] = []
@@ -242,6 +292,8 @@ def aggregate(logs: List[AppLog], windows: List[DowntimeWindow],
                                 if not w.recovered)),
         n_windows=len(windows),
         n_unrecovered_windows=sum(1 for w in windows if not w.recovered),
+        n_hedged_win=n_hedged, n_fast_failed=n_fast_failed,
+        n_shed=n_shed, n_retried=n_retried,
         windows=sorted(windows, key=lambda w: (w.epoch, w.t_start,
                                                w.app_id)))
 

@@ -21,7 +21,10 @@ rolling-with-rejoin, churn-under-failure, flaky-node, plus
 cold-load-storm (a site outage under a degraded cloud uplink — the
 model-state plane's worst case: every surviving server cold-loads at
 once and the fetch paths contend; pair it with the "edge" storage
-preset), and chaos (a seeded randomized churn stream from
+preset), three resilience storms — retry-amplification,
+thundering-herd-rejoin, metastable-overload (crash + spike compositions
+stressing the request-plane toolkit, core/resilience.py) — and chaos
+(a seeded randomized churn stream from
 core/chaos.py — the soak harness's always-on scenario). Generators
 (`cascade_failures`, `rolling_failures`, `flaky_server`) compose into
 custom scenarios.
@@ -329,6 +332,66 @@ def _cold_load_storm(cluster, apps, rng) -> Scenario:
                     "bandwidth")
 
 
+def _retry_amplification(cluster, apps, rng) -> Scenario:
+    """The resilience layer's headline storm: a server crash immediately
+    followed by a cluster-wide 3x load spike — the client-side retry
+    wave a blackout triggers. Without the toolkit every spiked request
+    against the dead primary is lost (and survivors drown in queueing);
+    with it, hedges bridge to warm backups, breakers fail fast, and
+    admission thins the spike during the recovery drain
+    (tools/bench_resilience.py gates on-beats-off here)."""
+    sid = _pick_servers(cluster, rng, 1)[0]
+    events: List[ScenarioEvent] = [
+        ServerFail(t=1.0, server=sid),
+        LoadSpike(t=1.2, factor=3.0, duration=10.0),
+    ]
+    return Scenario(
+        name="retry-amplification",
+        events=events,
+        horizon=35.0,
+        description="server crash + immediate 3x retry wave: the storm "
+                    "that erases MTTR wins without request shaping")
+
+
+def _thundering_herd_rejoin(cluster, apps, rng) -> Scenario:
+    """A whole site blacks out, then every one of its servers rejoins
+    at the same instant while pent-up demand (2.5x spike) slams the
+    cluster — rejoin refill and the spike contend for the same recovery
+    drain."""
+    site = rng.choice(sorted(cluster.sites))
+    sids = sorted(cluster.sites[site])
+    events: List[ScenarioEvent] = [SiteFail(t=1.0, site=site)]
+    events += [ServerRejoin(t=9.0, server=s) for s in sids]
+    events.append(LoadSpike(t=9.0, factor=2.5, duration=8.0))
+    return Scenario(
+        name="thundering-herd-rejoin",
+        events=events,
+        horizon=40.0,
+        description="site outage, then all its servers rejoin at once "
+                    "under a pent-up 2.5x demand wave")
+
+
+def _metastable_overload(cluster, apps, rng) -> Scenario:
+    """The metastable failure mode: a sustained (20 s) 2x overload with
+    a crash at its start and a second crash mid-overload — the system
+    must recover while queueing pressure never lets up, the regime
+    where uncontrolled retries keep a healthy-capacity cluster
+    saturated indefinitely."""
+    sids = _pick_servers(cluster, rng, 2)
+    events: List[ScenarioEvent] = [
+        ServerFail(t=1.0, server=sids[0]),
+        LoadSpike(t=1.5, factor=2.0, duration=20.0),
+    ]
+    if len(sids) > 1:
+        events.append(ServerFail(t=7.0, server=sids[1]))
+    return Scenario(
+        name="metastable-overload",
+        events=events,
+        horizon=40.0,
+        description="sustained 2x overload with two crashes inside it: "
+                    "recovery under never-relenting queueing pressure")
+
+
 def _chaos(cluster, apps, rng) -> Scenario:
     """Seeded randomized churn stream (core/chaos.py): crashes with
     staggered rejoins, site blackouts, load spikes, and link degrades
@@ -349,6 +412,9 @@ SCENARIOS: Dict[str, ScenarioBuilder] = {
     "churn-under-failure": _churn_under_failure,
     "flaky-node": _flaky_node,
     "cold-load-storm": _cold_load_storm,
+    "retry-amplification": _retry_amplification,
+    "thundering-herd-rejoin": _thundering_herd_rejoin,
+    "metastable-overload": _metastable_overload,
     "chaos": _chaos,
 }
 

@@ -45,8 +45,10 @@ from repro.core.metrics import TrafficSummary
 from repro.core.modelstate import (CLOUD_LINK, LOCAL, LinkScale,
                                    LoadTicket, ModelRegistry, disk_link,
                                    nic_link, storage_preset)
-from repro.core.scenario import (
-    AppArrival, AppDeparture, LinkDegrade, LoadSpike, Scenario, ServerFail, ServerRejoin, SiteFail, build_scenario)
+from repro.core.resilience import active as resilience_active
+from repro.core.scenario import (AppArrival, AppDeparture, LinkDegrade,
+                                 LoadSpike, Scenario, ServerFail,
+                                 ServerRejoin, SiteFail, build_scenario)
 from repro.core.traffic import TrafficConfig, TrafficPlane
 from repro.core.variants import (
     Application, Variant, synthetic_family, LOAD_BW, WARMUP_S)
@@ -269,6 +271,11 @@ class SimConfig:
     # adaptive protection (core/autopilot.py): False = the static
     # criticality rule, bit-exact historical behavior
     autopilot: bool = False
+    # request-plane resilience toolkit (core/resilience.py): a
+    # ResilienceConfig as a plain dict (JSON round-trip through
+    # ExperimentSpec). None/enabled=False = bit-exact historical
+    # request plane (golden fingerprints pinned)
+    resilience: Optional[dict] = None
 
 
 def synthetic_apps(cfg: SimConfig, rng: random.Random,
@@ -395,6 +402,7 @@ class Simulation:
         # crash instants; injections are numbered so downtime windows
         # carry the same epoch index as the controller's records
         self._injection_seq = 0
+        self.resilience = resilience_active(cfg.resilience)
         self.traffic: Optional[TrafficPlane] = None
         if cfg.traffic_rate_scale > 0:
             self.traffic = TrafficPlane(
@@ -403,9 +411,15 @@ class Simulation:
                     rate_scale=cfg.traffic_rate_scale,
                     chunk_s=cfg.traffic_chunk_s,
                     diurnal_amplitude=cfg.traffic_diurnal_amplitude,
-                    diurnal_period=cfg.traffic_diurnal_period))
+                    diurnal_period=cfg.traffic_diurnal_period),
+                resilience=self.resilience)
             self.controller.routing.observer = self._on_route_set
             self.controller.routing.drop_observer = self._on_route_drop
+            if self.resilience is not None:
+                # admission control needs the recovery-drain intervals;
+                # the observer hook is a no-op when unset (off-path)
+                self.controller.scheduler.drain_observer = \
+                    self.traffic.record_drain
         if cfg.autopilot:
             self.controller.metrics_feed = self._autopilot_feed
         # warm-headroom observation: (bytes, count) sampled once per
@@ -552,7 +566,19 @@ class Simulation:
                     if (inst.app_id in self.controller.apps
                             and routes.get(inst.app_id, (None,))[0]
                             == inst.server_id):
-                        self.traffic.mark_down(inst.app_id, t_fail, epoch)
+                        backup = None
+                        if self.resilience is not None:
+                            # hedged requests go to the app's warm
+                            # backup, valid only if its host survived
+                            # this injection
+                            warm = self.controller.warm.get(inst.app_id)
+                            if warm is not None:
+                                v, wsid, _key = warm
+                                srv = self.cluster.servers.get(wsid)
+                                if srv is not None and srv.alive:
+                                    backup = (v.accuracy, v.compute)
+                        self.traffic.mark_down(inst.app_id, t_fail,
+                                               epoch, backup=backup)
             t_detect = (self.detector.detection_latency_bound()
                         + DETECT_SWEEP_S / 4)
             self.events.after(t_detect, lambda: self.controller

@@ -47,6 +47,7 @@ import numpy as np
 from repro.core.controller import NOTIFY_OVERHEAD_S
 from repro.core.metrics import (AppLog, DowntimeWindow, TrafficSummary,
                                 UP, DOWN, GONE, aggregate, classify_app)
+from repro.core.resilience import ResilienceConfig, shape_app_log
 
 
 # ---------------------------------------------------------------------------
@@ -131,8 +132,10 @@ class TrafficPlane:
     """
 
     def __init__(self, seed: int = 0,
-                 cfg: Optional[TrafficConfig] = None):
+                 cfg: Optional[TrafficConfig] = None,
+                 resilience: Optional[ResilienceConfig] = None):
         self.cfg = cfg or TrafficConfig()
+        self.resilience = resilience
         self.rng = np.random.default_rng([0x7AFF1C, seed])
         self._jitter_seed = seed
         # per-app chunked arrival buffers + the logical rate per chunk
@@ -144,6 +147,11 @@ class TrafficPlane:
         self._slo: Dict[str, float] = {}
         self.windows: List[DowntimeWindow] = []
         self._open: Dict[str, DowntimeWindow] = {}
+        # recovery-drain intervals (RecoveryScheduler.drain_observer):
+        # closed [t0, t1] pairs + the currently-open drain start
+        self._drains: List[Tuple[float, float]] = []
+        self._drain_open: Optional[float] = None
+        self._drain_depth = 0
 
     # -- timeline recording (control-plane hooks) ---------------------------
     def _last_t(self, app_id: str) -> float:
@@ -175,16 +183,40 @@ class TrafficPlane:
             w.t_end = t
             self.windows.append(w)
 
-    def mark_down(self, app_id: str, t: float, epoch: int):
+    def mark_down(self, app_id: str, t: float, epoch: int,
+                  backup: Optional[Tuple[float, float]] = None):
         """The app's serving replica just died (crash instant, *before*
-        detection): requests fail from here until the next route push."""
+        detection): requests fail from here until the next route push.
+
+        ``backup`` is the app's warm backup (accuracy, service_time) at
+        the crash instant, when one exists and the resilience layer is
+        on — hedged requests inside the window are served by it.
+        """
         tl = self._timeline.get(app_id)
         if tl is None or tl[-1][1] != UP:
             return                      # unknown or already down
         t = max(t, self._last_t(app_id))
         tl.append((t, DOWN, math.nan, math.nan))
         self._open[app_id] = DowntimeWindow(app_id=app_id, epoch=epoch,
-                                            t_start=t)
+                                            t_start=t, backup=backup)
+
+    def record_drain(self, kind: str, t: float):
+        """RecoveryScheduler drain-activity hook ("start"/"end").
+
+        Folds possibly-nested start/end pairs into flat non-overlapping
+        [t0, t1] intervals; admission control thins served load inside
+        them (see core/resilience.py).
+        """
+        if kind == "start":
+            if self._drain_depth == 0:
+                self._drain_open = t
+            self._drain_depth += 1
+        elif kind == "end":
+            self._drain_depth = max(0, self._drain_depth - 1)
+            if self._drain_depth == 0 and self._drain_open is not None:
+                if t > self._drain_open:
+                    self._drains.append((self._drain_open, t))
+                self._drain_open = None
 
     def mark_gone(self, app_id: str, t: float):
         """App departed: requests after this instant are not offered."""
@@ -265,11 +297,22 @@ class TrafficPlane:
             svcs = np.array([e[3] for e in tl])
             jitter_rng = np.random.default_rng(
                 [0x1A7E, self._jitter_seed, idx])
-            logs.append(classify_app(
+            log = classify_app(
                 app_id, arrivals, rates, times, states, accs, svcs,
                 full_accuracy=self._full_acc[app_id],
                 slo=self._slo[app_id],
                 jitter_rng=jitter_rng,
                 jitter_sigma=self.cfg.jitter_sigma,
-                util_k=self.cfg.util_k, util_cap=self.cfg.util_cap))
+                util_k=self.cfg.util_k, util_cap=self.cfg.util_cap)
+            if self.resilience is not None:
+                drains = list(self._drains)
+                if self._drain_open is not None and t_end > self._drain_open:
+                    drains.append((self._drain_open, t_end))
+                log = shape_app_log(
+                    log, rates, times=times, states=states, accs=accs,
+                    svcs=svcs, windows=windows, drains=drains,
+                    full_accuracy=self._full_acc[app_id],
+                    slo=self._slo[app_id], util_k=self.cfg.util_k,
+                    util_cap=self.cfg.util_cap, rcfg=self.resilience)
+            logs.append(log)
         return aggregate(logs, windows, t_end)

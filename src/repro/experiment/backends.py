@@ -112,7 +112,7 @@ class SimBackend:
             traffic_diurnal_amplitude=spec.traffic_diurnal_amplitude,
             traffic_diurnal_period=spec.traffic_diurnal_period,
             storage=spec.storage, scheduler=spec.scheduler,
-            autopilot=spec.autopilot,
+            autopilot=spec.autopilot, resilience=spec.resilience,
             load_bw=spec.load_bw, warmup_s=spec.warmup_s,
             nic_bw=spec.nic_bw, cloud_bw=spec.cloud_bw,
             replication=spec.replication)
@@ -174,6 +174,7 @@ class TestbedBackend:
             scheduler=spec.scheduler, load_bw=spec.load_bw,
             warmup_s=spec.warmup_s, nic_bw=spec.nic_bw,
             cloud_bw=spec.cloud_bw, replication=spec.replication,
+            resilience=spec.resilience,
             apps=list(spec.apps) if spec.apps is not None else None)
         try:
             tb.deploy()

@@ -59,6 +59,10 @@ def _build_parser() -> argparse.ArgumentParser:
     run.add_argument("--autopilot", action="store_true", default=None,
                      help="adaptive protection from the live metrics "
                           "plane (core/autopilot.py; sim only)")
+    run.add_argument("--resilience", action="store_true", default=None,
+                     help="request-plane resilience toolkit with default "
+                          "knobs: hedging, breakers, bulkheads, "
+                          "admission (core/resilience.py, both backends)")
     run.add_argument("--client-hz", type=float, default=None)
     run.add_argument("--settle", type=float, default=None,
                      dest="settle_s")
@@ -107,6 +111,8 @@ def _spec_from_args(args) -> "ExperimentSpec":
         overrides["archs"] = [a.strip() for a in args.archs.split(",")
                               if a.strip()]
         overrides.setdefault("app_mix", "arch")
+    if getattr(args, "resilience", None):
+        overrides["resilience"] = {"enabled": True}
     return spec.with_(**overrides)
 
 

@@ -74,6 +74,10 @@ class ExperimentSpec:
     # adaptive protection (core/autopilot.py): sim-only closed loop from
     # observed traffic back into the warm set / replication / drain order
     autopilot: bool = False
+    # request-plane resilience toolkit (core/resilience.py): a
+    # ResilienceConfig as a plain dict ({"enabled": True} turns the
+    # defaults on); None = historical request plane, bit-exact
+    resilience: Optional[dict] = None
     load_bw: float = LOAD_BW            # bytes/s disk->HBM (Fig. 2b)
     warmup_s: float = WARMUP_S          # per-instance warmup seconds
     nic_bw: Optional[float] = None      # preset overrides (None = keep)

@@ -30,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 class Router:
     def __init__(self):
         self._routes: Dict[str, Tuple[str, str]] = {}
+        self._backups: Dict[str, Tuple[str, str]] = {}
         self._epoch = 0
         self._lock = threading.RLock()
         self._subscribers: List[Callable[[str, str, str], None]] = []
@@ -74,6 +75,28 @@ class Router:
     def lookup(self, app_id: str) -> Optional[Tuple[str, str]]:
         with self._lock:
             return self._routes.get(app_id)
+
+    # -- backup routes (resilience layer) -----------------------------------
+    # Hedged requests and breaker fail-fast need the app's warm-backup
+    # (server, variant) next to the primary route. Backups do not bump
+    # the epoch: they are advisory (the hedge target), not the serving
+    # route — the epoch contract above stays exactly as documented.
+    def set_backup(self, app_id: str, server_id: str, variant: str):
+        with self._lock:
+            self._backups[app_id] = (server_id, variant)
+
+    def drop_backup(self, app_id: str):
+        with self._lock:
+            self._backups.pop(app_id, None)
+
+    def lookup_backup(self, app_id: str) -> Optional[Tuple[str, str]]:
+        with self._lock:
+            return self._backups.get(app_id)
+
+    def sync_backups(self, table: Dict[str, Tuple[str, str]]):
+        """Replace the whole backup table (controller warm-set sync)."""
+        with self._lock:
+            self._backups = dict(table)
 
     def snapshot(self) -> Tuple[int, Dict[str, Tuple[str, str]]]:
         """Consistent (epoch, routes-copy) pair."""

@@ -46,6 +46,9 @@ from repro.core.heartbeat import FailureDetector, WallClock
 from repro.core.metrics import AppLog, DowntimeWindow, TrafficSummary, aggregate
 from repro.core.modelstate import (LOCAL, LinkScale, LoadTicket,
                                    ModelRegistry, storage_preset)
+from repro.core.resilience import (Bulkhead, CircuitBreaker, RetryBudget,
+                                   hedged_call)
+from repro.core.resilience import active as resilience_active
 from repro.core.scenario import (AppArrival, AppDeparture, LinkDegrade,
                                  LoadSpike, Scenario, ServerFail,
                                  ServerRejoin, SiteFail)
@@ -267,9 +270,13 @@ class TestbedTelemetry:
 
     # -- data plane (client threads) ----------------------------------------
     def record(self, app_id: str, t: float, ok: bool, accuracy: float,
-               req=None):
+               req=None, outcome: Optional[str] = None):
+        """`outcome` tags the resilience layer's classes: "hedged"
+        (served via the warm backup), "fast_failed" (open breaker
+        answered instantly), "shed" (admission/bulkhead reject);
+        None = the plain served/failed path."""
         with self._lock:
-            self._attempts[app_id].append((t, ok, accuracy, req))
+            self._attempts[app_id].append((t, ok, accuracy, req, outcome))
 
     # -- aggregation --------------------------------------------------------
     def summarize(self, t_end: float) -> TrafficSummary:
@@ -293,7 +300,14 @@ class TestbedTelemetry:
                  if (r[1] and r[3] is not None
                      and r[3].done_at is not None) else math.nan
                  for r in rows], np.float64)
-            # dropped = failed while inside a client-visible blackout
+            # resilience outcome tags (all-False without the toolkit)
+            hedged = np.array([r[4] == "hedged" for r in rows], bool)
+            fast_failed = np.array([r[4] == "fast_failed"
+                                    for r in rows], bool)
+            shed = np.array([r[4] == "shed" for r in rows], bool)
+            # dropped = failed while inside a client-visible blackout;
+            # fast-failed and shed requests are their own terminal
+            # classes, not drops
             dropped = np.zeros(n, bool)
             for w in windows:
                 if w.app_id != app_id:
@@ -301,6 +315,7 @@ class TestbedTelemetry:
                 hi = w.t_end if w.recovered else math.inf
                 dropped |= (~served & (arrivals >= w.t_start)
                             & (arrivals < hi))
+            dropped &= ~(fast_failed | shed)
             full_acc = self._full_acc[app_id]
             slo = self._slo[app_id]
             with np.errstate(invalid="ignore"):
@@ -310,7 +325,9 @@ class TestbedTelemetry:
                 app_id, arrivals, served, dropped,
                 offered=np.ones(n, bool), degraded=degraded,
                 slo_violated=slo_violated, accuracy=accuracy,
-                latency=latency))
+                latency=latency, hedged=hedged,
+                fast_failed=fast_failed, shed=shed,
+                retried=np.zeros(n, bool)))
         return aggregate(logs, windows, t_end)
 
     def client_stats(self, windows: Optional[List[DowntimeWindow]] = None,
@@ -325,7 +342,7 @@ class TestbedTelemetry:
             out = {}
             for app_id, rows in self._attempts.items():
                 st = ClientStats(app_id)
-                for t, ok, _acc, _req in rows:
+                for t, ok, _acc, _req, _outcome in rows:
                     if ok:
                         st.ok += 1
                         st.last_ok = t
@@ -353,8 +370,19 @@ class MiniTestbed:
                  nic_bw: Optional[float] = None,
                  cloud_bw: Optional[float] = None,
                  replication: Optional[int] = None,
+                 resilience=None,
                  apps: Optional[Sequence[Application]] = None):
         self.rng = random.Random(seed)
+        # request-plane resilience toolkit (None = historical client
+        # path): per-app breakers/budgets, per-server bulkheads, live
+        # hedging to the router's backup table
+        self.resilience = resilience_active(resilience)
+        self._breakers: Dict[str, CircuitBreaker] = {}
+        self._budgets: Dict[str, RetryBudget] = {}
+        self._bulkheads: Dict[str, Bulkhead] = {}
+        self._lat_samples: Dict[str, List[float]] = {}
+        self._admit_credit: Dict[str, float] = {}
+        self._res_lock = threading.Lock()
         self.clock = WallClock()
         self.detector = FailureDetector(self.clock, interval=0.020)
         self.router = Router()
@@ -429,6 +457,147 @@ class MiniTestbed:
         self.router.drop_route(app_id)
         self.telemetry.mark_gone(app_id)
 
+    # -- resilience layer ----------------------------------------------------
+    def _sync_backups(self):
+        """Mirror the controller's warm set into the router's backup
+        table (the hedge / fail-fast target). No-op without the
+        toolkit."""
+        if self.resilience is None:
+            return
+        with self._ctl_lock:
+            table = {aid: (sid, v.name)
+                     for aid, (v, sid, _key)
+                     in self.controller.warm.items()}
+        self.router.sync_backups(table)
+
+    def _res_state(self, app_id: str):
+        r = self.resilience
+        with self._res_lock:
+            breaker = self._breakers.get(app_id)
+            if breaker is None:
+                breaker = self._breakers[app_id] = CircuitBreaker(r)
+                self._budgets[app_id] = RetryBudget(r)
+                self._lat_samples[app_id] = []
+                self._admit_credit[app_id] = 0.0
+            return breaker, self._budgets[app_id]
+
+    def _bulkhead(self, server_id: str) -> Bulkhead:
+        with self._res_lock:
+            bh = self._bulkheads.get(server_id)
+            if bh is None:
+                bh = self._bulkheads[server_id] = Bulkhead(
+                    self.resilience.bulkhead_slots)
+            return bh
+
+    def _hedge_delay(self, app_id: str) -> float:
+        """p99-based hedge delay from this app's recent live latencies."""
+        r = self.resilience
+        with self._res_lock:
+            lats = sorted(self._lat_samples.get(app_id, ()))
+        if not lats:
+            return r.hedge_min_delay_s
+        p99 = lats[min(len(lats) - 1, int(0.99 * len(lats)))]
+        return max(r.hedge_min_delay_s, r.hedge_delay_factor * p99)
+
+    def _submit_arm(self, app: Application, route, req, *,
+                    bulkhead: bool, flags: dict, key: str):
+        """Build one hedged_call arm: submit `req` on `route`. Returns
+        (accuracy, req) on success, None on any failure; outcome flags
+        are reported through `flags` (thread-safe enough: one writer
+        per key)."""
+        def arm(cancel: threading.Event):
+            if cancel.is_set() or route is None:
+                return None
+            sid, vname = route
+            w = self.workers.get(sid)
+            if not (w and w.alive and w.has(vname)):
+                flags[key] = False
+                return None
+            bh = self._bulkhead(sid) if bulkhead else None
+            if bh is not None and not bh.try_acquire():
+                flags[key + "_shed"] = True
+                flags[key] = False
+                return None
+            try:
+                t0 = time.monotonic()
+                ok = w.submit(vname, req)
+                flags[key] = bool(ok)
+                if not ok:
+                    return None
+                with self._res_lock:
+                    samples = self._lat_samples.setdefault(app.id, [])
+                    samples.append(time.monotonic() - t0)
+                    del samples[:-64]          # keep a rolling window
+                return (app.variant_by_name(vname).accuracy, req)
+            finally:
+                if bh is not None:
+                    bh.release()
+        return arm
+
+    def _attempt_resilient(self, app: Application, rng: random.Random,
+                           seq: int):
+        """One client request through the toolkit. Returns
+        (ok, accuracy, req, outcome)."""
+        r = self.resilience
+        breaker, budget = self._res_state(app.id)
+        # admission control: while recovery loads are draining, thin
+        # offered load to the admit_util fraction (deterministic
+        # credit counter, same rule as the simulator's shaping)
+        if not self.executor.idle():
+            with self._res_lock:
+                credit = self._admit_credit[app.id] + r.admit_util
+                if credit < 1.0:
+                    self._admit_credit[app.id] = credit
+                    return False, math.nan, None, "shed"
+                self._admit_credit[app.id] = credit - 1.0
+        budget.on_request()
+        primary = self.router.lookup(app.id)
+        backup = self.router.lookup_backup(app.id)
+        vocab = app.variants[0].config.vocab_size
+        flags: dict = {}
+
+        if not breaker.allow():
+            # open breaker: fail fast to the degraded (backup) variant
+            # instead of queueing on the dead primary — a redirect, so
+            # no retry-budget spend
+            if backup is not None:
+                req_b = make_request(rng, f"{app.id}-b{seq}", vocab)
+                out = self._submit_arm(app, backup, req_b, bulkhead=True,
+                                       flags=flags, key="backup")(
+                                           threading.Event())
+                if out is not None:
+                    return True, out[0], out[1], "hedged"
+            return False, math.nan, None, "fast_failed"
+
+        req_p = make_request(rng, f"{app.id}-r{seq}", vocab)
+        primary_arm = self._submit_arm(app, primary, req_p,
+                                       bulkhead=True, flags=flags,
+                                       key="primary")
+        backup_arm = None
+        if backup is not None:
+            req_b = make_request(rng, f"{app.id}-h{seq}", vocab)
+            inner = self._submit_arm(app, backup, req_b, bulkhead=True,
+                                     flags=flags, key="backup")
+
+            def _gated_backup(cancel):
+                # a hedge is a re-issue: it spends retry budget
+                if not budget.try_spend():
+                    return None
+                return inner(cancel)
+            backup_arm = _gated_backup
+
+        value, winner = hedged_call(primary_arm, backup_arm,
+                                    self._hedge_delay(app.id))
+        if "primary" in flags:             # primary arm actually ran
+            breaker.record(flags["primary"])
+        if winner == "primary":
+            return True, value[0], value[1], None
+        if winner == "backup":
+            return True, value[0], value[1], "hedged"
+        if flags.get("primary_shed") or flags.get("backup_shed"):
+            return False, math.nan, None, "shed"
+        return False, math.nan, None, None
+
     # -- deployment ---------------------------------------------------------
     def deploy(self):
         for app in self.apps:
@@ -448,33 +617,43 @@ class MiniTestbed:
             while (not self.workers[sid].has(variant.name)
                    and time.monotonic() < deadline):
                 time.sleep(0.05)
+        self._sync_backups()
         return self
 
     # -- clients ------------------------------------------------------------
     def _client_loop(self, app: Application, hz: float):
         st_ok = 0
+        seq = 0
         rng = random.Random(hash(app.id) & 0xffff)
         while not self._stop.is_set() and app.id not in self._departed:
             ok = False
             acc = math.nan
             req = None
+            outcome = None
+            seq += 1
             try:
-                route = self.router.lookup(app.id)
-                if route:
-                    sid, vname = route
-                    w = self.workers.get(sid)
-                    if w and w.alive and w.has(vname):
-                        req = make_request(
-                            rng, f"{app.id}-r{st_ok}",
-                            app.variants[0].config.vocab_size)
-                        ok = w.submit(vname, req)
-                        if ok:
-                            acc = app.variant_by_name(vname).accuracy
-                            st_ok += 1
+                if self.resilience is not None:
+                    ok, acc, req, outcome = self._attempt_resilient(
+                        app, rng, seq)
+                    if ok:
+                        st_ok += 1
+                else:
+                    route = self.router.lookup(app.id)
+                    if route:
+                        sid, vname = route
+                        w = self.workers.get(sid)
+                        if w and w.alive and w.has(vname):
+                            req = make_request(
+                                rng, f"{app.id}-r{st_ok}",
+                                app.variants[0].config.vocab_size)
+                            ok = w.submit(vname, req)
+                            if ok:
+                                acc = app.variant_by_name(vname).accuracy
+                                st_ok += 1
             except Exception:                      # noqa: BLE001
                 ok = False
             self.telemetry.record(app.id, time.monotonic(), ok, acc,
-                                  req if ok else None)
+                                  req if ok else None, outcome=outcome)
             time.sleep(1.0 / (hz * self._spike_factor.get(app.id, 1.0)))
 
     def _start_client(self, app: Application, hz: float):
@@ -504,11 +683,13 @@ class MiniTestbed:
                 self._detect_latency = now - t_fail
             with self._ctl_lock:
                 self.controller.handle_failures(newly, t_fail)
+            self._sync_backups()
 
     def _reprotect_loop(self, every: float):
         while not self._stop.wait(every):
             with self._ctl_lock:
                 self.controller.reprotect()
+            self._sync_backups()
 
     # -- scenario event handlers ---------------------------------------------
     def _fail_servers(self, sids: List[str]):

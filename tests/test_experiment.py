@@ -200,3 +200,37 @@ def test_cross_backend_parity():
     assert t.n_windows >= 1
     assert t.n_offered > 0
     assert math.isfinite(t.client_mttr_avg) and t.client_mttr_avg > 0.0
+
+
+@pytest.mark.slow
+def test_cross_backend_parity_with_resilience():
+    """The resilience toolkit is request-plane only: with it on, both
+    backends must still make the SAME control-plane failover choices,
+    and both must report through the new outcome classes."""
+    spec = ExperimentSpec(
+        backend="testbed", scenario="single-server", app_mix="arch",
+        archs=["qwen2.5-3b", "rwkv6-3b", "recurrentgemma-2b"],
+        n_sites=3, servers_per_site=2, headroom=0.35, client_hz=20.0,
+        time_scale=0.25, settle_s=25.0, seed=1,
+        resilience={"enabled": True})
+    sim = run_experiment(spec.with_(backend="sim"))
+    tb = run_experiment(spec)
+
+    # control plane untouched by the request-plane layer: identical
+    # failover decisions on both engines, and identical to the
+    # resilience-off sim path
+    assert sim.recovery_by_app() == tb.recovery_by_app()
+    off = run_experiment(spec.with_(backend="sim", resilience=None))
+    assert sim.recovery_by_app() == off.recovery_by_app()
+    assert tb.overall["recovery_rate"] == 1.0
+    # both sides fold the new outcome classes into the same schema
+    for t in (sim.traffic, tb.traffic):
+        d = t.to_dict()
+        assert {"n_hedged_win", "n_fast_failed",
+                "n_shed", "n_retried"} <= set(d)
+    # the toolkit visibly engaged on at least one backend: warm-backed
+    # apps hedge, unprotected ones fast-fail or shed under the blackout
+    engaged = sum(sim.traffic.to_dict()[k] + tb.traffic.to_dict()[k]
+                  for k in ("n_hedged_win", "n_fast_failed",
+                            "n_shed", "n_retried"))
+    assert engaged > 0

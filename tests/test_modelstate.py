@@ -58,9 +58,12 @@ def test_golden_scenario_fingerprints(name):
 
 def test_golden_covers_every_pre_modelstate_scenario():
     # every named scenario that predates the model-state plane is pinned
-    # (cold-load-storm arrived with it, chaos with the soak harness)
-    assert set(GOLDEN_FINGERPRINTS) == (set(SCENARIOS)
-                                        - {"cold-load-storm", "chaos"})
+    # (cold-load-storm arrived with it, chaos with the soak harness, and
+    # the three resilience storms with the request-plane toolkit)
+    assert set(GOLDEN_FINGERPRINTS) == (
+        set(SCENARIOS) - {"cold-load-storm", "chaos",
+                          "retry-amplification", "thundering-herd-rejoin",
+                          "metastable-overload"})
 
 
 # ---------------------------------------------------------------------------

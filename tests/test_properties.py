@@ -13,7 +13,11 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.cluster import RESOURCES, make_cluster  # noqa: E402
+from repro.core.metrics import (DOWN, UP, DowntimeWindow,  # noqa: E402
+                                classify_app)
 from repro.core.planner import faillite_heuristic, match  # noqa: E402
+from repro.core.resilience import (CLOSED, CircuitBreaker,  # noqa: E402
+                                   ResilienceConfig, shape_app_log)
 from repro.core.variants import Application, synthetic_family  # noqa: E402
 
 
@@ -112,3 +116,82 @@ def test_filter_spec_always_divisible(d0, d1, data, model):
         f = int(np.prod([sizes[a] for a in axes]))
         assert dim % f == 0
         assert "pod" not in axes            # absent axes dropped
+
+
+# ---------------------------------------------------------------------------
+# resilience-layer properties (core/resilience.py)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n=st.integers(0, 300),
+       has_backup=st.booleans(),
+       recovered=st.booleans(),
+       drain=st.booleans(),
+       retry_budget=st.floats(0.0, 1.0),
+       admit_util=st.floats(0.3, 0.95))
+def test_shaping_classifies_every_request_exactly_once(
+        seed, n, has_backup, recovered, drain, retry_budget, admit_util):
+    """Conservation invariant: after the vectorized resilience shaping,
+    every offered request lands in EXACTLY one terminal class of
+    {served-plain, hedged-win, retried, dropped, fast-failed, shed},
+    and hedged/retried/degraded/SLO-violated stay subsets of served."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.sort(rng.uniform(0.0, 10.0, n))
+    rates = rng.uniform(0.2, 6.0, n)
+    # one blackout [2, 4) on an otherwise-UP timeline
+    times = np.array([0.0, 2.0] + ([4.0] if recovered else []))
+    states = np.array([UP, DOWN] + ([UP] if recovered else []))
+    accs = np.full(len(times), 0.9)
+    svcs = np.full(len(times), 0.01)
+    log = classify_app("a", arrivals, rates, times, states, accs, svcs,
+                       full_accuracy=0.9, slo=0.2,
+                       jitter_rng=np.random.default_rng(seed + 1))
+    w = DowntimeWindow("a", epoch=0, t_start=2.0,
+                       t_end=4.0 if recovered else np.inf,
+                       backup=(0.8, 0.02) if has_backup else None)
+    cfg = ResilienceConfig(enabled=True, retry_budget=retry_budget,
+                           admit_util=admit_util)
+    out = shape_app_log(log, rates, times=times, states=states,
+                        accs=accs, svcs=svcs, windows=[w],
+                        drains=[(3.0, 7.0)] if drain else [],
+                        full_accuracy=0.9, slo=0.2,
+                        util_k=2.0, util_cap=0.9, rcfg=cfg)
+    classes = np.stack([out.served & ~out.hedged & ~out.retried,
+                        out.hedged, out.retried, out.dropped,
+                        out.fast_failed, out.shed])
+    assert np.array_equal(classes.sum(axis=0),
+                          out.offered.astype(int))
+    assert not np.any(out.hedged & ~out.served)
+    assert not np.any(out.retried & ~out.served)
+    assert not np.any(out.degraded & ~out.served)
+    assert not np.any(out.slo_violated & ~out.served)
+    # served requests carry finite accuracy/latency; shed carry neither
+    assert np.all(np.isfinite(out.accuracy[out.served]))
+    assert np.all(np.isfinite(out.latency[out.served]))
+    assert not np.any(np.isfinite(out.latency[out.shed]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       outcomes=st.lists(st.booleans(), max_size=40),
+       open_s=st.floats(0.05, 2.0))
+def test_breaker_never_stays_open_against_healthy_backend(
+        seed, outcomes, open_s):
+    """Liveness: whatever outcome history tripped (or didn't trip) the
+    breaker, once the backend is healthy the open window expires, a
+    probe is granted, and one probe success closes the breaker."""
+    clock = {"t": 0.0}
+    br = CircuitBreaker(ResilienceConfig(enabled=True,
+                                         breaker_open_s=open_s),
+                        clock=lambda: clock["t"])
+    rng = random.Random(seed)
+    for ok in outcomes:
+        clock["t"] += rng.uniform(0.0, 0.2)
+        if br.allow():
+            br.record(ok)
+    clock["t"] += open_s + 1e-9            # any open window expires
+    assert br.allow()                      # probe (or plain closed pass)
+    br.record(True)                        # healthy backend answers
+    assert br.state == CLOSED
+    assert br.allow()

@@ -1,0 +1,314 @@
+"""Storm battery for the request-plane resilience toolkit.
+
+Covers every primitive in core/resilience.py deterministically (fake
+clocks, manual-completion executors — no sleeps where avoidable), pins
+the six pre-resilience scenarios bit-exact with the toolkit off, and
+proves end-to-end that the toolkit beats the bare request plane on the
+retry-amplification storm.
+"""
+
+import hashlib
+
+import numpy as np
+import pytest
+
+import test_modelstate as golden
+from repro.core.controller import LoadExecutor, RecoveryScheduler
+from repro.core.resilience import (CLOSED, HALF_OPEN, OPEN, Bulkhead,
+                                   CircuitBreaker, ResilienceConfig,
+                                   RetryBudget, active, admit_mask,
+                                   hedged_call)
+from repro.core.simulation import SimConfig, Simulation
+from repro.core.variants import Application, synthetic_family
+
+# ---------------------------------------------------------------------------
+# config plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_config_round_trip():
+    cfg = ResilienceConfig(enabled=True, breaker_window=5)
+    assert ResilienceConfig.from_dict(cfg.to_dict()) == cfg
+
+
+def test_config_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown ResilienceConfig"):
+        ResilienceConfig.from_dict({"enabled": True, "bogus": 1})
+
+
+def test_coerce_dict_defaults_to_enabled():
+    # passing a dict at all expresses intent to turn the layer on
+    assert ResilienceConfig.coerce({}).enabled
+    assert ResilienceConfig.coerce({"enabled": False}).enabled is False
+    assert ResilienceConfig.coerce(None) is None
+
+
+def test_active_gates_on_enabled():
+    assert active(None) is None
+    assert active({"enabled": False}) is None
+    cfg = active({"breaker_window": 3})
+    assert cfg is not None and cfg.breaker_window == 3
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker state machine (fake clock, no sleeping)
+# ---------------------------------------------------------------------------
+
+def _breaker(**kw):
+    clock = {"t": 0.0}
+    cfg = ResilienceConfig(enabled=True, **kw)
+    return CircuitBreaker(cfg, clock=lambda: clock["t"]), clock
+
+
+def test_breaker_trips_on_failure_rate():
+    br, _ = _breaker(breaker_window=8, breaker_min_failures=4,
+                     breaker_failure_rate=0.5)
+    for _ in range(3):
+        br.record(False)
+    assert br.state == CLOSED              # below min_failures
+    br.record(True)
+    br.record(False)                       # 4 fails / 5 outcomes >= 0.5
+    assert br.state == OPEN
+    assert not br.allow()
+
+
+def test_breaker_failure_rate_guard():
+    # plenty of absolute failures but diluted by successes: stays closed
+    br, _ = _breaker(breaker_window=16, breaker_min_failures=4,
+                     breaker_failure_rate=0.5)
+    for _ in range(4):
+        br.record(True)
+        br.record(True)
+        br.record(True)
+        br.record(False)                   # 25% failure rate
+    assert br.state == CLOSED
+
+
+def test_breaker_half_open_probe_closes_on_success():
+    br, clock = _breaker(breaker_min_failures=2, breaker_failure_rate=0.5,
+                         breaker_open_s=0.5, breaker_probes=1)
+    br.record(False), br.record(False)
+    assert br.state == OPEN
+    assert not br.allow()                  # still inside the open window
+    clock["t"] = 0.6
+    assert br.allow()                      # the probe
+    assert br.state == HALF_OPEN
+    assert not br.allow()                  # only breaker_probes granted
+    br.record(True)
+    assert br.state == CLOSED
+    assert br.allow()
+
+
+def test_breaker_half_open_probe_reopens_on_failure():
+    br, clock = _breaker(breaker_min_failures=2, breaker_failure_rate=0.5,
+                         breaker_open_s=0.5)
+    br.record(False), br.record(False)
+    clock["t"] = 0.6
+    assert br.allow()
+    br.record(False)                       # probe failed
+    assert br.state == OPEN
+    assert not br.allow()                  # open window restarted at 0.6
+    clock["t"] = 1.2
+    assert br.allow()                      # ...and reopens for probing
+
+
+# ---------------------------------------------------------------------------
+# bulkhead + retry budget
+# ---------------------------------------------------------------------------
+
+def test_bulkhead_rejects_at_capacity_and_releases():
+    bh = Bulkhead(2)
+    assert bh.try_acquire() and bh.try_acquire()
+    assert not bh.try_acquire()            # full
+    assert bh.in_flight == 2
+    bh.release()
+    assert bh.try_acquire()                # slot freed
+    assert bh.in_flight == 2
+
+
+def test_bulkhead_floor_is_one_slot():
+    assert Bulkhead(0).slots == 1
+
+
+def test_retry_budget_accrues_and_exhausts():
+    budget = RetryBudget(ResilienceConfig(enabled=True, retry_budget=0.5))
+    assert not budget.try_spend()          # empty bucket
+    budget.on_request()
+    budget.on_request()                    # 2 * 0.5 = 1 token
+    assert budget.try_spend()
+    assert not budget.try_spend()          # exhausted again
+    for _ in range(100):
+        budget.on_request()
+    assert budget.tokens == pytest.approx(8.0)   # capped
+
+
+# ---------------------------------------------------------------------------
+# hedged call
+# ---------------------------------------------------------------------------
+
+def test_hedge_primary_fast_win_cancels_backup():
+    backup_cancel = {}
+
+    def primary(cancel):
+        return "p"
+
+    def backup(cancel):
+        backup_cancel["ev"] = cancel
+        cancel.wait(1.0)
+        return "b"
+
+    value, winner = hedged_call(primary, backup, delay_s=0.0)
+    assert (value, winner) == ("p", "primary")
+    # backup may not even have started (primary settled first); if it
+    # did, its cancel event must be set
+    ev = backup_cancel.get("ev")
+    assert ev is None or ev.wait(1.0)
+
+
+def test_hedge_backup_wins_when_primary_fails():
+    # primary fails immediately -> backup engages BEFORE the hedge
+    # delay elapses (no point waiting out the delay on a dead primary)
+    import time as _time
+    t0 = _time.monotonic()
+    value, winner = hedged_call(lambda c: None, lambda c: "b",
+                                delay_s=5.0)
+    assert (value, winner) == ("b", "backup")
+    assert _time.monotonic() - t0 < 2.0
+
+
+def test_hedge_backup_wins_after_delay_on_slow_primary():
+    def primary(cancel):
+        cancel.wait(5.0)
+        return None
+
+    value, winner = hedged_call(primary, lambda c: "b", delay_s=0.01)
+    assert (value, winner) == ("b", "backup")
+
+
+def test_hedge_both_fail():
+    assert hedged_call(lambda c: None, lambda c: None,
+                       delay_s=0.0) == (None, None)
+
+
+def test_hedge_no_backup():
+    assert hedged_call(lambda c: "p", None, delay_s=0.0) == \
+        ("p", "primary")
+    assert hedged_call(lambda c: None, None, delay_s=0.0) == (None, None)
+
+
+# ---------------------------------------------------------------------------
+# deterministic admission thinning
+# ---------------------------------------------------------------------------
+
+def test_admit_mask_fraction_and_determinism():
+    p = np.full(1000, 0.75)
+    keep = admit_mask(p)
+    assert keep.sum() == 750
+    assert np.array_equal(keep, admit_mask(p))     # pure function
+    # maximal spacing: no run of more than ceil(1/(1-p)) rejections
+    assert not np.any(~keep[:-1] & ~keep[1:])      # p=0.75 -> isolated
+
+
+def test_admit_mask_admits_everything_at_one():
+    assert admit_mask(np.ones(10)).all()
+
+
+# ---------------------------------------------------------------------------
+# recovery-drain observer (feeds admission control)
+# ---------------------------------------------------------------------------
+
+class _ManualExecutor(LoadExecutor):
+    def __init__(self):
+        self._cbs = []
+
+    def load(self, app, variant, server_id, on_ready):
+        self._cbs.append(on_ready)
+
+    def complete(self, i=0, t=1.0):
+        self._cbs.pop(i)(t)
+
+
+def _app(i):
+    return Application(id=f"a{i}", family="f", request_rate=1.0,
+                       variants=synthetic_family(f"g{i}", 1e9))
+
+
+def test_drain_observer_start_end_pairing():
+    ex = _ManualExecutor()
+    sched = RecoveryScheduler(ex, mode="fifo")
+    events = []
+    sched.drain_observer = lambda kind, t: events.append(kind)
+    sched.submit(_app(0), _app(0).full, "s0", lambda t: None)
+    sched.submit(_app(1), _app(1).full, "s0", lambda t: None)
+    assert events == ["start"]             # nested drains fold into one
+    ex.complete()
+    assert events == ["start"]
+    ex.complete()
+    assert events == ["start", "end"]      # ends only at depth zero
+
+
+def test_drain_observer_survives_dead_server_queue_drop():
+    # criticality mode queues loads; dropping a dead server's queue must
+    # release the drain counter for never-dispatched items (no leak)
+    ex = _ManualExecutor()
+    alive = {"s0": True}
+    sched = RecoveryScheduler(ex, mode="criticality",
+                              alive_fn=lambda sid: alive[sid])
+    events = []
+    sched.drain_observer = lambda kind, t: events.append(kind)
+    sched.submit(_app(0), _app(0).full, "s0", lambda t: None)
+    sched.submit(_app(1), _app(1).full, "s0", lambda t: None)  # queued
+    alive["s0"] = False
+    sched.reset_server("s0")               # drops the queued item
+    ex.complete()                          # in-flight item still lands
+    assert events == ["start", "end"]
+
+
+# ---------------------------------------------------------------------------
+# golden pinning: resilience OFF is bit-exact with the pre-toolkit plane
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(golden.GOLDEN_FINGERPRINTS))
+def test_goldens_bit_exact_with_resilience_off(name):
+    sim = Simulation(SimConfig(resilience={"enabled": False},
+                               **golden.GOLDEN_CFG)).setup()
+    res = sim.run_named_scenario(name)
+    got = hashlib.sha256(repr(res.fingerprint()).encode()).hexdigest()
+    assert got == golden.GOLDEN_FINGERPRINTS[name], (
+        f"{name}: resilience={{enabled: False}} must leave the request "
+        f"plane bit-identical to the pre-toolkit behavior")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: toolkit on beats off on the retry-amplification storm
+# ---------------------------------------------------------------------------
+
+_STORM_CFG = dict(n_sites=3, servers_per_site=4, headroom=0.25,
+                  policy="faillite", seed=0)
+
+
+def _run_storm(resilience):
+    sim = Simulation(SimConfig(resilience=resilience,
+                               **_STORM_CFG)).setup()
+    return sim.run_named_scenario("retry-amplification")
+
+
+def test_retry_amplification_toolkit_beats_bare_plane():
+    off = _run_storm(None).traffic
+    on = _run_storm({"enabled": True}).traffic
+    assert on.n_hedged_win + on.n_shed + on.n_fast_failed \
+        + on.n_retried > 0                 # the toolkit actually engaged
+    assert off.n_hedged_win == off.n_shed == 0   # ...and only when on
+    # the gated claims: tail latency AND client MTTR AND
+    # accuracy-weighted goodput all improve under the storm
+    assert on.latency_p99 < off.latency_p99
+    assert on.client_mttr_avg < off.client_mttr_avg
+    assert on.goodput > off.goodput
+    assert on.availability >= off.availability
+
+
+def test_storm_scenarios_registered():
+    from repro.core.scenario import SCENARIOS
+    for name in ("retry-amplification", "thundering-herd-rejoin",
+                 "metastable-overload"):
+        assert name in SCENARIOS

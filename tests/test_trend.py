@@ -111,7 +111,8 @@ def test_bench_kind_mismatch_fails():
 
 def test_committed_trend_files_self_compare_green():
     for name in ("BENCH_soak.json", "BENCH_mttr_smoke.json",
-                 "BENCH_planner_smoke.json"):
+                 "BENCH_planner_smoke.json", "BENCH_resilience.json",
+                 "BENCH_resilience_smoke.json"):
         doc = json.loads((ROOT / name).read_text())
         fails, matched = CT.compare(doc, copy.deepcopy(doc))
         assert not fails and matched > 0, (name, fails)
@@ -146,3 +147,22 @@ def test_soak_rows_carry_every_gated_metric():
     gated = {m.key for m in CT.SPECS["soak"].metrics}
     assert gated <= set(row), gated - set(row)
     assert set(CT.SPECS["soak"].id_keys) <= set(row)
+
+
+def test_resilience_rows_carry_every_gated_metric():
+    """Same key-coherence check for the resilience gate: the committed
+    trend rows (produced by tools/bench_resilience.py) must carry every
+    metric AND identity key the 'resilience' spec gates on."""
+    doc = json.loads((ROOT / "BENCH_resilience_smoke.json").read_text())
+    spec = CT.SPECS["resilience"]
+    assert doc["bench"] == "resilience"
+    rows = doc[spec.rows_key]
+    assert rows
+    gated = {m.key for m in spec.metrics}
+    for row in rows:
+        assert gated <= set(row), gated - set(row)
+        assert set(spec.id_keys) <= set(row)
+    # both arms of the on/off comparison are present for every storm
+    arms = {(r["scenario"], r["resilience"]) for r in rows}
+    for scenario in {r["scenario"] for r in rows}:
+        assert (scenario, "on") in arms and (scenario, "off") in arms

@@ -1,0 +1,157 @@
+#!/usr/bin/env python
+"""Request-plane resilience benchmark -> BENCH_resilience.json.
+
+Runs the three resilience storms (retry-amplification,
+thundering-herd-rejoin, metastable-overload) with the toolkit OFF and
+ON — same cluster, same seeds, same scenario stream — and records, per
+(scenario, resilience) cell, the client-observed latency percentiles,
+the pooled client-downtime percentiles, availability, accuracy-weighted
+goodput, and the new outcome-class counters:
+
+    PYTHONPATH=src python tools/bench_resilience.py            # full
+    PYTHONPATH=src python tools/bench_resilience.py --smoke    # CI
+    PYTHONPATH=src python tools/bench_resilience.py --check-win
+
+`--check-win` exits non-zero unless the toolkit strictly improves BOTH
+the p99 latency proxy AND the accuracy-weighted goodput on the
+retry-amplification storm — the acceptance gate for this layer.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+STORMS = ("retry-amplification", "thundering-herd-rejoin",
+          "metastable-overload")
+GATE_STORM = "retry-amplification"
+
+
+def run_cell(scenario, resilience, seeds, *, n_sites, servers_per_site,
+             headroom):
+    import numpy as np
+
+    from repro.experiment import ExperimentSpec, run_experiment
+
+    downs, n_unrec = [], 0
+    lat_p50, lat_p99, avail, goodput = [], [], [], []
+    counters = {"n_hedged_win": 0, "n_fast_failed": 0, "n_shed": 0,
+                "n_retried": 0}
+    for seed in seeds:
+        spec = ExperimentSpec(
+            scenario=scenario, seed=seed, n_sites=n_sites,
+            servers_per_site=servers_per_site, headroom=headroom,
+            resilience={"enabled": True} if resilience else None)
+        t = run_experiment(spec).traffic
+        downs += [w.client_downtime for w in t.windows
+                  if w.recovered and math.isfinite(w.client_downtime)]
+        n_unrec += t.n_unrecovered_windows
+        lat_p50.append(t.latency_p50)
+        lat_p99.append(t.latency_p99)
+        avail.append(t.availability)
+        goodput.append(t.goodput)
+        for k in counters:
+            counters[k] += getattr(t, k)
+
+    downs_a = np.asarray(downs, dtype=float)
+    return {
+        "scenario": scenario,
+        "resilience": "on" if resilience else "off",
+        "seeds": list(seeds),
+        # latency proxy over served requests, averaged over seeds
+        "latency_p50_ms": round(1e3 * float(np.mean(lat_p50)), 3),
+        "latency_p99_ms": round(1e3 * float(np.mean(lat_p99)), 3),
+        # pooled client-observed blackout percentiles (-1 = no windows)
+        "client_p50_ms": round(float(np.percentile(downs_a, 50)) * 1e3, 2)
+        if downs_a.size else -1.0,
+        "client_p99_ms": round(float(np.percentile(downs_a, 99)) * 1e3, 2)
+        if downs_a.size else -1.0,
+        "availability": round(float(np.mean(avail)), 6),
+        "goodput": round(float(np.mean(goodput)), 6),
+        "n_windows": len(downs),
+        "n_unrecovered_windows": n_unrec,
+        **counters,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_resilience.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one seed, small cluster (CI)")
+    ap.add_argument("--seeds", default=None,
+                    help="comma-separated seed list")
+    ap.add_argument("--check-win", action="store_true",
+                    help="fail unless the toolkit strictly improves "
+                         "p99 latency AND goodput on "
+                         f"{GATE_STORM}")
+    args = ap.parse_args()
+
+    if args.seeds:
+        seeds = [int(s) for s in args.seeds.split(",")]
+    else:
+        seeds = [0] if args.smoke else [0, 1, 2]
+    shape = (dict(n_sites=3, servers_per_site=4, headroom=0.25)
+             if args.smoke
+             else dict(n_sites=4, servers_per_site=5, headroom=0.2))
+
+    rows = []
+    for scenario in STORMS:
+        for resilience in (False, True):
+            row = run_cell(scenario, resilience, seeds, **shape)
+            rows.append(row)
+            print(f"resilience,{scenario},{row['resilience']},"
+                  f"p99={row['latency_p99_ms']}ms,"
+                  f"goodput={row['goodput']},"
+                  f"avail={row['availability']},"
+                  f"hedged={row['n_hedged_win']},"
+                  f"shed={row['n_shed']}", flush=True)
+
+    def cell(scenario, resilience):
+        return next(r for r in rows if r["scenario"] == scenario
+                    and r["resilience"] == resilience)
+
+    off, on = cell(GATE_STORM, "off"), cell(GATE_STORM, "on")
+    doc = {
+        "bench": "resilience",
+        "description": "request-plane resilience toolkit "
+                       "(core/resilience.py) on vs off across the "
+                       "three resilience storms: latency percentiles "
+                       "averaged over seeds, client-downtime "
+                       "percentiles pooled over seeds",
+        "seeds": seeds,
+        "cluster": shape,
+        "unit": "milliseconds",
+        "rows": rows,
+        "gate": {
+            "scenario": GATE_STORM,
+            "p99_off_ms": off["latency_p99_ms"],
+            "p99_on_ms": on["latency_p99_ms"],
+            "goodput_off": off["goodput"],
+            "goodput_on": on["goodput"],
+        },
+    }
+    Path(args.out).write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {args.out} "
+          f"(p99 {off['latency_p99_ms']} -> {on['latency_p99_ms']} ms, "
+          f"goodput {off['goodput']} -> {on['goodput']})")
+
+    if args.check_win:
+        ok = (on["latency_p99_ms"] < off["latency_p99_ms"]
+              and on["goodput"] > off["goodput"])
+        if not ok:
+            print(f"FAIL: toolkit did not strictly win on {GATE_STORM} "
+                  f"(p99 {off['latency_p99_ms']} -> "
+                  f"{on['latency_p99_ms']} ms, goodput "
+                  f"{off['goodput']} -> {on['goodput']})")
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -28,7 +28,8 @@ from typing import List, Tuple
 ROOT = Path(__file__).resolve().parents[1]
 
 SNIPPET_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/SCENARIOS.md",
-                 "docs/PLANNER.md", "docs/EXPERIMENTS.md", "docs/CI.md"]
+                 "docs/PLANNER.md", "docs/EXPERIMENTS.md", "docs/CI.md",
+                 "docs/RESILIENCE.md"]
 LINK_FILES_GLOB = ["*.md", "docs/*.md"]
 
 FENCE_RE = re.compile(r"^```python\s*$")
@@ -84,7 +85,10 @@ def check_links(paths: List[Path]) -> List[str]:
                 continue
             rel = target.split("#", 1)[0]
             resolved = (path.parent / rel).resolve()
-            if not resolved.exists():
+            # bytecode caches are build litter, never a valid doc
+            # target — a link "satisfied" by one is still broken
+            if not resolved.exists() \
+                    or "__pycache__" in resolved.parts:
                 file_errors.append(f"{path.relative_to(ROOT)}: broken "
                                    f"link -> {target}")
         status = "ok  " if not file_errors else "FAIL"
@@ -104,7 +108,8 @@ def main() -> int:
     do_snippets = args.snippets or not args.links
 
     link_paths = sorted({p for g in LINK_FILES_GLOB
-                         for p in ROOT.glob(g) if p.is_file()})
+                         for p in ROOT.glob(g)
+                         if p.is_file() and "__pycache__" not in p.parts})
     snippet_paths = [ROOT / f for f in SNIPPET_FILES if (ROOT / f).exists()]
 
     errors: List[str] = []

@@ -78,6 +78,17 @@ SPECS: Dict[str, BenchSpec] = {
             Metric("ctl_mttr_ms", "lower", rel_tol=0.15, abs_tol=10.0),
             Metric("client_p99_ms", "lower", rel_tol=0.20, abs_tol=25.0),
         )),
+    # bench_resilience rows (storm x toolkit on/off): deterministic sim
+    # metrics; latency/goodput bands absorb reviewed drift only
+    "resilience": BenchSpec(
+        rows_key="rows",
+        id_keys=("scenario", "resilience"),
+        metrics=(
+            Metric("goodput", "higher", rel_tol=0.02, abs_tol=0.005),
+            Metric("availability", "higher", abs_tol=0.01),
+            Metric("latency_p99_ms", "lower", rel_tol=0.20, abs_tol=25.0),
+            Metric("client_p99_ms", "lower", rel_tol=0.25, abs_tol=50.0),
+        )),
     # bench_planner heuristic points: parity/placements are exact;
     # speedup is wall-clock and machine-dependent -> very loose band
     "planner": BenchSpec(
