@@ -3,17 +3,34 @@ applications / servers / variants (paper fixes 500 servers, 1000 apps,
 4 variants and sweeps each), now per registered policy.
 
 The sweep runs every realtime planner from the registry (vectorized
-`greedy`, the `legacy-greedy` loop oracle, `load-aware`) on identical
-instances, and a second stage reports end-to-end recovery: MTTR and
-cumulative planner wall time for a single-server failure at fleet
-scale (>= 1000 apps / 100 servers in quick mode, beyond in --full)."""
+`greedy`, the `legacy-greedy` loop oracle, `load-aware`, site-sharded
+`sharded`) on identical instances. The fleet-scale stage is NOT an
+ad-hoc sweep: it replays the exact (servers x apps) cells from
+tools/bench_scale.py through that harness's own `run_cell`, so the
+numbers behind the paper figure and the numbers the CI trend gate
+checks (BENCH_scale*.json via tools/check_trend.py) come from one
+code path and can never disagree."""
 
 from __future__ import annotations
 
+import importlib.util
 import random
+import sys
 import time
+from pathlib import Path
 
-POLICIES = ("greedy", "legacy-greedy", "load-aware")
+POLICIES = ("greedy", "legacy-greedy", "load-aware", "sharded")
+
+
+def _load_bench_scale():
+    """tools/ is not a package; load the scale harness by path."""
+    root = Path(__file__).resolve().parents[1]
+    spec = importlib.util.spec_from_file_location(
+        "bench_scale", root / "tools" / "bench_scale.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules["bench_scale"] = mod
+    spec.loader.exec_module(mod)
+    return mod
 
 
 def _instance(n_apps, n_servers, n_variants):
@@ -42,23 +59,6 @@ def _bench(policy, n_apps, n_servers, n_variants):
     return dt, len(res.assignment)
 
 
-def _mttr_point(n_servers, server_mem, planner, seed=0):
-    """End-to-end: one server failure at fleet scale; returns
-    (#apps, planner wall time inside the controller, controller MTTR)."""
-    from repro.core.simulation import SimConfig, Simulation
-
-    cfg = SimConfig(n_sites=max(1, n_servers // 10), servers_per_site=10,
-                    server_mem=server_mem, planner=planner, seed=seed,
-                    traffic_rate_scale=0.0)
-    sim = Simulation(cfg).setup()
-    victim = max(sim.cluster.alive_servers(),
-                 key=lambda s: sum(1 for i in s.instances.values()
-                                   if i.role == "primary"))
-    res = sim.inject_failure(servers=[victim.id], run_for=30.0)
-    return (len(sim.controller.apps), sim.controller.plan_wall_s,
-            res.mttr_avg)
-
-
 def run(quick: bool = True):
     apps_sweep = [100, 1000] if quick else [100, 500, 1000, 2000, 3000]
     srv_sweep = [50, 100] if quick else [100, 250, 500, 750, 1000]
@@ -82,16 +82,21 @@ def run(quick: bool = True):
             rows.append(("variants", n, pol, dt, placed))
             print(f"fig12,variants,{n},{pol},{dt:.4f},{placed}")
 
-    # planner wall time alongside MTTR, end-to-end at fleet scale:
-    # 100 servers sized so ~1000 primaries place (~2.3 GB avg full model)
-    print("# fig12-mttr: n_servers,policy,n_apps,planner_wall_s,mttr_s")
-    mttr_points = [(100, 48e9)] if quick else [(100, 48e9), (200, 48e9)]
-    for n_servers, mem in mttr_points:
-        for pol in ("greedy", "load-aware"):
-            n_apps, wall, mttr = _mttr_point(n_servers, mem, pol)
-            rows.append(("mttr", n_servers, pol, wall, n_apps, mttr))
-            print(f"fig12-mttr,{n_servers},{pol},{n_apps},"
-                  f"{wall:.4f},{mttr:.4f}")
+    # fleet-scale stage: the SAME cells and measurement function the
+    # committed BENCH_scale*.json trend (and its CI gate) are built
+    # from — figure and gate share one code path by construction
+    bs = _load_bench_scale()
+    cells = bs.SMOKE_CELLS if quick else bs.FULL_CELLS
+    print("# fig12-scale: n_servers,n_apps,events_per_sec,"
+          "plan_wall_peak_s,recovery_rate")
+    for cell in cells:
+        r = bs.run_cell(cell, "epoch")
+        rows.append(("scale", cell["n_servers"], cell["n_apps"],
+                     r["events_per_sec"], r["plan_wall_peak_s"],
+                     r["recovery_rate"]))
+        print(f"fig12-scale,{cell['n_servers']},{cell['n_apps']},"
+              f"{r['events_per_sec']:.0f},{r['plan_wall_peak_s']:.4f},"
+              f"{r['recovery_rate']:.3f}")
     return rows
 
 

@@ -313,7 +313,8 @@ class FailLiteController:
                  datastore: Optional[DataStore] = None,
                  registry: Optional[ModelRegistry] = None,
                  scheduler: str = "fifo",
-                 autopilot: Optional[object] = None):
+                 autopilot: Optional[object] = None,
+                 planner_dtype: str = "float64"):
         assert policy in POLICIES, policy
         self.cluster = cluster
         self.clock = clock
@@ -343,7 +344,7 @@ class FailLiteController:
                              else get_planner("greedy"))
         # persistent array-backed capacity view; Cluster notifies it of
         # per-server deltas, so planning never rebuilds a view per call
-        self.state = PlannerState(cluster)
+        self.state = PlannerState(cluster, dtype=planner_dtype)
         if registry is not None:
             self.state.attach_registry(registry)
         self.plan_wall_s = 0.0       # cumulative planner time (all calls)
@@ -354,6 +355,27 @@ class FailLiteController:
         self.apps: Dict[str, Application] = {}
         self.primaries: Dict[str, str] = {}
         self.warm: Dict[str, Tuple[Variant, str, str]] = {}  # app->(v,srv,key)
+        # incremental warm-gap tracking (docs/SCALE.md): candidate apps
+        # currently lacking a warm backup, maintained at every warm
+        # mutation so `replan_lost_backups` never scans all 100k apps.
+        # `_reg_seq` records deploy order, because the historical full
+        # scan iterated the apps dict in insertion order and baseline
+        # placement (`_fullsize_assign`) is order-dependent.
+        self._warm_missing: Set[str] = set()
+        self._reg_seq: Dict[str, int] = {}
+        self._reg_counter = itertools.count()
+        # bumped on every warm-set mutation; observers (the simulator's
+        # warm-bytes trend sample) cache their fold against it instead
+        # of re-summing 100k warm entries per sweep
+        self.warm_gen = 0
+        # cluster mutation counter backing the futile-replan memo: a
+        # reprotect plan over an unchanged cluster and unchanged app
+        # list is deterministic, so a sweep that placed nothing is
+        # skipped verbatim until something actually moves
+        self.cluster_gen = 0
+        cluster.subscribe(self._bump_cluster_gen)
+        self._futile_replan = None
+        self._futile_retry = None
         self.routing = RoutingTable()
         # `records` keeps the LATEST record per app (legacy view);
         # `epoch_records[k]` holds the records of failure epoch k, so
@@ -385,6 +407,32 @@ class FailLiteController:
         self._gen[app_id] = self._gen.get(app_id, 0) + 1
         return self._gen[app_id]
 
+    # -- warm-gap bookkeeping ----------------------------------------------
+    def _is_warm_candidate(self, app: Application) -> bool:
+        """Static warm-candidate rule per policy (the autopilot's
+        adaptive set bypasses the incremental tracker entirely)."""
+        if self.policy == "full-warm":
+            return True
+        if self.policy == "full-cold":
+            return False
+        return app.critical
+
+    def _warm_set(self, app_id: str, variant: Variant, sid: str, key: str):
+        """All warm-backup grants flow through here so `_warm_missing`
+        stays exact."""
+        self.warm[app_id] = (variant, sid, key)
+        self.warm_gen += 1
+        self._warm_missing.discard(app_id)
+
+    def _warm_del(self, app_id: str):
+        """All warm-backup losses flow through here: a still-present
+        candidate app immediately becomes a replan target."""
+        if self.warm.pop(app_id, None) is not None:
+            self.warm_gen += 1
+        app = self.apps.get(app_id)
+        if app is not None and self._is_warm_candidate(app):
+            self._warm_missing.add(app_id)
+
     # ------------------------------------------------------------------
     # Step 1: arrival + proactive failover
     # ------------------------------------------------------------------
@@ -392,13 +440,16 @@ class FailLiteController:
                        server_id: Optional[str] = None) -> str:
         """Worst-fit primary placement of the full model (paper §5.1)."""
         if server_id is None:
-            server_id = self.state.worst_fit(app.full.demand)
+            server_id = self.state.worst_fit(app.full.demand_vec)
             if server_id is None:
                 raise ValueError(f"no capacity for primary of {app.id}")
         self.cluster.place(app.id, app.full, server_id, "primary")
         # register only after placement succeeded: a rejected arrival
         # must not leak into controller state
         self.apps[app.id] = app
+        self._reg_seq[app.id] = next(self._reg_counter)
+        if self._is_warm_candidate(app):
+            self._warm_missing.add(app.id)
         if self.registry is not None:
             # seed the app's checkpoint replicas (primary disk + spread)
             self.registry.ensure_app(app, server_id)
@@ -438,7 +489,7 @@ class FailLiteController:
 
         for app_id, (variant, sid) in assignment.items():
             key = self.cluster.place(app_id, variant, sid, "warm")
-            self.warm[app_id] = (variant, sid, key)
+            self._warm_set(app_id, variant, sid, key)
             self.executor.prepare_warm(self.apps[app_id], variant, sid)
             self.ds.put(f"warm/{app_id}", {"server": sid,
                                            "variant": variant.name})
@@ -468,9 +519,9 @@ class FailLiteController:
             if self.site_independence and self.primaries.get(app.id):
                 p_site = self.cluster.servers[self.primaries[app.id]].site
                 excl |= set(self.cluster.sites.get(p_site, ()))
-            sid = view.worst_fit(app.full.demand, excl)
+            sid = view.worst_fit(app.full.demand_vec, excl)
             if sid is not None:
-                view.take(sid, app.full.demand)
+                view.take(sid, app.full.demand_vec)
                 out[app.id] = (app.full, sid)
         return out
 
@@ -534,7 +585,7 @@ class FailLiteController:
         for app_id, (v, sid, key) in list(self.warm.items()):
             if (sid in failed_set
                     or key not in self.cluster.servers[sid].instances):
-                del self.warm[app_id]
+                self._warm_del(app_id)
                 self.ds.delete(f"warm/{app_id}")
 
         records: Dict[str, RecoveryRecord] = {}
@@ -548,7 +599,7 @@ class FailLiteController:
                 self.executor.activate(app, v, sid)
                 self.cluster.servers[sid].instances[key].role = "primary"
                 self.primaries[app.id] = sid
-                del self.warm[app.id]
+                self._warm_del(app.id)
                 self.routing.set(app.id, sid, v.name)
                 mttr = (t_detect - t_fail) + NOTIFY_OVERHEAD_S
                 rec = RecoveryRecord(
@@ -626,8 +677,7 @@ class FailLiteController:
         while i < len(evictable):
             for app_id, (v, sid, key) in evictable[i:i + batch]:
                 self.cluster.remove(key, sid)
-                if app_id in self.warm:
-                    del self.warm[app_id]
+                self._warm_del(app_id)
                 self.ds.delete(f"warm/{app_id}")
                 # demoted, not abandoned: the model artifact stays on
                 # disk, so the app keeps cold (progressive) protection
@@ -740,7 +790,7 @@ class FailLiteController:
             del self.primaries[app_id]
         for app_id in [a for a, (_, s, _) in self.warm.items()
                        if s == server_id]:
-            del self.warm[app_id]
+            self._warm_del(app_id)
             self.ds.delete(f"warm/{app_id}")
 
     def handle_departure(self, app_id: str):
@@ -755,8 +805,10 @@ class FailLiteController:
             self.registry.forget_app(app, in_use=in_use)
         self.cluster.remove_app(app_id)
         self.primaries.pop(app_id, None)
-        if app_id in self.warm:
-            del self.warm[app_id]
+        if self.warm.pop(app_id, None) is not None:
+            self.warm_gen += 1
+        self._warm_missing.discard(app_id)
+        self._reg_seq.pop(app_id, None)
         self._unrecovered.pop(app_id, None)
         self.cold_protected.discard(app_id)
         self.routing.drop(app_id)
@@ -805,9 +857,10 @@ class FailLiteController:
 
         n_demoted = 0
         for app_id in dec.demote:
-            entry = self.warm.pop(app_id, None)
+            entry = self.warm.get(app_id)
             if entry is None:
                 continue
+            self._warm_del(app_id)
             v, sid, key = entry
             self.cluster.remove(key, sid)
             self.ds.delete(f"warm/{app_id}")
@@ -863,10 +916,20 @@ class FailLiteController:
                 break
         return n
 
+    def _bump_cluster_gen(self, _server_id: str) -> None:
+        self.cluster_gen += 1
+
     def _retry_unrecovered(self) -> int:
         down = [(aid, tf, ep) for aid, (tf, ep) in self._unrecovered.items()
                 if aid in self.apps]
         if not down:
+            return 0
+        # same apps against an unmoved cluster replays the exact plan
+        # that already failed to place anything — skip it (bit-exact:
+        # planning is deterministic in (apps, cluster) and a futile
+        # plan mutates nothing)
+        memo = (tuple(aid for aid, _, _ in down), self.cluster_gen)
+        if memo == self._futile_retry:
             return 0
         apps = [self.apps[aid] for aid, _, _ in down]
         if self.policy == "faillite":
@@ -892,16 +955,50 @@ class FailLiteController:
                 self.epoch_records[ep][aid] = rec
             self.records[aid] = rec
             n += 1
+        self._futile_retry = memo if not keys else None
         return n
+
+    def _warm_gap_candidates(self) -> List[Application]:
+        """Candidate apps lacking a warm backup, in the exact order the
+        historical full scan over `_warm_candidates()` produced them.
+
+        The incremental `_warm_missing` set makes this O(gap) instead of
+        O(apps) per sweep — the difference between a sub-second and a
+        minutes-long reprotect tick at 100k apps. The autopilot's
+        adaptive protected set changes between sweeps outside the
+        tracker's view, so it keeps the full scan."""
+        if self.autopilot is not None:
+            return [a for a in self._warm_candidates()
+                    if a.id not in self.warm]
+        if self.policy == "full-cold":
+            return []
+        apps = []
+        for aid in list(self._warm_missing):
+            app = self.apps.get(aid)
+            if app is None:
+                self._warm_missing.discard(aid)     # departed; lazily GC
+            elif aid not in self.warm:
+                apps.append(app)
+        # historical order: the apps dict iterates in deploy order, and
+        # full-warm scanned criticals first then the rest
+        if self.policy == "full-warm":
+            apps.sort(key=lambda a: (not a.critical, self._reg_seq[a.id]))
+        else:
+            apps.sort(key=lambda a: self._reg_seq[a.id])
+        return apps
 
     def replan_lost_backups(self):
         """Apps whose warm backup died get a new one planned from the
         remaining capacity. Idempotent; safe to call every sweep."""
-        missing = [a for a in self._warm_candidates()
-                   if a.id not in self.warm
-                   and self.primaries.get(a.id) in self.cluster.servers
+        missing = [a for a in self._warm_gap_candidates()
+                   if self.primaries.get(a.id) in self.cluster.servers
                    and self.cluster.servers[self.primaries[a.id]].alive]
         if not missing:
+            return {}
+        # futile-replan memo: identical gap list + unmoved cluster =
+        # the same deterministic plan that placed nothing last sweep
+        memo = (tuple(a.id for a in missing), self.cluster_gen)
+        if memo == self._futile_replan:
             return {}
         assignment = (self._plan(missing, alpha=self.alpha)
                       if self.policy == "faillite"
@@ -912,12 +1009,13 @@ class FailLiteController:
                 key = self.cluster.place(app_id, variant, sid, "warm")
             except ValueError:
                 continue           # capacity raced away; retry next sweep
-            self.warm[app_id] = (variant, sid, key)
+            self._warm_set(app_id, variant, sid, key)
             self.cold_protected.discard(app_id)
             self.executor.prepare_warm(self.apps[app_id], variant, sid)
             self.ds.put(f"warm/{app_id}", {"server": sid,
                                            "variant": variant.name})
             placed[app_id] = (variant, sid)
+        self._futile_replan = memo if not placed else None
         return placed
 
     @property

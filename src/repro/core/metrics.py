@@ -147,6 +147,90 @@ def classify_app(app_id: str, arrivals: np.ndarray, rates: np.ndarray,
                   degraded, slo_violated, accuracy, latency)
 
 
+def classify_apps(items: List[tuple], *, jitter_sigma: float = 0.25,
+                  util_k: float = 2.0,
+                  util_cap: float = 0.9) -> List["AppLog"]:
+    """Batched `classify_app` over many apps in one vectorized pass
+    (epoch-mode summarize; see docs/SCALE.md).
+
+    ``items`` is a list of ``(app_id, arrivals, rates, times, states,
+    accs, svcs, full_accuracy, slo, jitter_rng)`` tuples — the exact
+    arguments `classify_app` takes, one tuple per app.
+
+    Bit-exact with calling `classify_app` per item:
+
+    * the timeline interval lookup is reformulated per app as an
+      integer ``np.repeat`` over ``searchsorted(arrivals, times,
+      "left")`` boundaries — provably equal to
+      ``searchsorted(times, arrivals, "right") - 1`` for sorted inputs
+      (duplicate timeline times collapse to zero-length intervals in
+      both forms), with no float offset tricks that could flip
+      near-tie comparisons;
+    * jitter is drawn from each app's own generator, with the same
+      single ``normal(mu, sigma, n)`` call per app;
+    * every remaining operation is elementwise, so grouping apps into
+      one flat array changes no float result.
+    """
+    if not items:
+        return []
+    ns = np.array([it[1].size for it in items], np.int64)
+    ms = np.array([it[3].size for it in items], np.int64)
+    offs = np.zeros(len(items) + 1, np.int64)
+    np.cumsum(ns, out=offs[1:])
+    toffs = np.zeros(len(items) + 1, np.int64)
+    np.cumsum(ms, out=toffs[1:])
+    total = int(offs[-1])
+    g_idx = np.zeros(total, np.int64)       # per-request timeline row
+    pre = np.zeros(total, bool)             # before the app's first deploy
+    gnorm = np.empty(total, np.float64)     # per-request jitter draws
+    mu = -0.5 * jitter_sigma ** 2
+    for k, it in enumerate(items):
+        arrivals, times, jitter_rng = it[1], it[3], it[9]
+        n = arrivals.size
+        if n == 0:
+            continue
+        m = times.size
+        lo, hi = int(offs[k]), int(offs[k + 1])
+        # method calls + direct integer subtraction: same values as
+        # np.searchsorted / np.diff(np.concatenate(...)) / np.clip with
+        # ~3 fewer dispatch wrappers per app (hot at 100k apps)
+        bb = np.empty(m + 2, np.int64)
+        bb[0] = 0
+        bb[1:-1] = arrivals.searchsorted(times, side="left")
+        bb[-1] = n
+        il = np.repeat(np.arange(-1, m), bb[1:] - bb[:-1])
+        pre[lo:hi] = il < 0
+        g_idx[lo:hi] = il.clip(0, m - 1) + toffs[k]
+        gnorm[lo:hi] = jitter_rng.normal(mu, jitter_sigma, n)
+    t_states = np.concatenate([it[4] for it in items])
+    t_accs = np.concatenate([it[5] for it in items])
+    t_svcs = np.concatenate([it[6] for it in items])
+    rates = (np.concatenate([it[2] for it in items]) if total
+             else np.empty(0, np.float64))
+    state = t_states[g_idx]
+    served = (~pre) & (state == UP)
+    dropped = (~pre) & (state == DOWN)
+    offered = ~(pre | (state == GONE))
+    accuracy = np.where(served, t_accs[g_idx], np.nan)
+    svc = np.where(served, t_svcs[g_idx], np.nan)
+    util = np.clip(rates * svc * util_k, 0.0, util_cap)
+    jitter = np.exp(gnorm)
+    full_acc = np.repeat(np.array([it[7] for it in items], np.float64), ns)
+    slo = np.repeat(np.array([it[8] for it in items], np.float64), ns)
+    with np.errstate(invalid="ignore"):
+        latency = svc / (1.0 - util) * jitter
+        degraded = served & (accuracy < full_acc - 1e-12)
+        slo_violated = served & (latency > slo)
+    out: List[AppLog] = []
+    for k, it in enumerate(items):
+        lo, hi = int(offs[k]), int(offs[k + 1])
+        out.append(AppLog(it[0], it[1], served[lo:hi], dropped[lo:hi],
+                          offered[lo:hi], degraded[lo:hi],
+                          slo_violated[lo:hi], accuracy[lo:hi],
+                          latency[lo:hi]))
+    return out
+
+
 @dataclass
 class TrafficSummary:
     """Run-level fold of every request outcome + downtime window."""
@@ -247,15 +331,19 @@ def aggregate(logs: List[AppLog], windows: List[DowntimeWindow],
             if cand:
                 w.t_first_served = min(cand)
 
-    n_offered = sum(int(np.count_nonzero(l.offered)) for l in logs)
-    n_served = sum(int(np.count_nonzero(l.served)) for l in logs)
-    n_dropped = sum(int(np.count_nonzero(l.dropped)) for l in logs)
-    n_degraded = sum(int(np.count_nonzero(l.degraded)) for l in logs)
-    n_slo = sum(int(np.count_nonzero(l.slo_violated)) for l in logs)
+    # integer counts are order-free — concatenate once and count in C
+    # instead of a 5x per-app Python genexpr sweep (hot at 100k apps)
+    def _cat_count(name: str) -> int:
+        arrs = [a for l in logs
+                if (a := getattr(l, name)) is not None and a.size]
+        return int(np.count_nonzero(np.concatenate(arrs))) if arrs else 0
 
-    def _count(name: str) -> int:
-        return sum(int(np.count_nonzero(getattr(l, name)))
-                   for l in logs if getattr(l, name) is not None)
+    n_offered = _cat_count("offered")
+    n_served = _cat_count("served")
+    n_dropped = _cat_count("dropped")
+    n_degraded = _cat_count("degraded")
+    n_slo = _cat_count("slo_violated")
+    _count = _cat_count
 
     n_hedged = _count("hedged")
     n_fast_failed = _count("fast_failed")
@@ -267,7 +355,13 @@ def aggregate(logs: List[AppLog], windows: List[DowntimeWindow],
     for l in logs:
         ok = l.served & ~l.slo_violated
         if ok.any():
-            good += float(np.nansum(l.accuracy[ok]))
+            # np.sum is bitwise nansum when no NaN is present (same
+            # pairwise reduce), and NaN always propagates through it —
+            # so sum first and fall back to the (much slower) masking
+            # nansum only on an actual NaN (testbed in-flight requests)
+            s = float(np.sum(l.accuracy[ok]))
+            good += float(np.nansum(l.accuracy[ok])) if math.isnan(s) \
+                else s
         if l.served.any():
             lat_all.append(l.latency[l.served])
     lats = np.concatenate(lat_all) if lat_all else np.empty(0)

@@ -24,11 +24,13 @@ from repro.core.planner.legacy import (faillite_heuristic_legacy, match,
                                        worst_fit)
 from repro.core.planner.state import PlannerState, ScratchView
 from repro.core.planner.vectorized import faillite_heuristic, plan_greedy
+from repro.core.planner.sharded import SiteIndex
 from repro.core.planner import policies as _policies  # noqa: F401  (registers planners)
+from repro.core.planner import sharded as _sharded  # noqa: F401  (registers "sharded")
 
 __all__ = [
     "HeuristicResult", "PlacementResult", "PlanRequest", "PlanResult",
-    "Planner", "PlannerState", "ScratchView",
+    "Planner", "PlannerState", "ScratchView", "SiteIndex",
     "available_planners", "build_constraints", "enumerate_vars",
     "eq1_objective", "faillite_heuristic", "faillite_heuristic_legacy",
     "get_planner", "match", "plan_greedy", "register_planner",

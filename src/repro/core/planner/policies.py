@@ -7,6 +7,9 @@
     locality       worst-fit with checkpoint-locality tie-breaking
                    (model-state plane: prefer servers that can fetch
                    the failover variant fastest — local ≫ peer ≫ cloud)
+    sharded        site-sharded worst-fit selection (planner/sharded.py):
+                   bit-identical to greedy, sublinear per attempt —
+                   the planet-scale option
 
 Select by name: `get_planner("greedy")`, or through the controller /
 simulator via `FailLiteController(planner="load-aware")` /

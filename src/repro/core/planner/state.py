@@ -46,8 +46,14 @@ def _ordered_sum(values) -> float:
 class PlannerState:
     """Persistent array view of a `Cluster` (see module docstring)."""
 
-    def __init__(self, cluster: Cluster, *, subscribe: bool = True):
+    def __init__(self, cluster: Cluster, *, subscribe: bool = True,
+                 dtype="float64"):
         self.cluster = cluster
+        # array dtype: float64 is the bit-exact default; float32 halves
+        # the (S, R) matrices' footprint for planet-scale runs (ulp at
+        # 16 GB is ~1 KB — placement-equivalent in practice but NOT
+        # fingerprint-preserving, see docs/SCALE.md)
+        self.dtype = np.dtype(dtype)
         # model-state plane attachment (checkpoint residency columns):
         # locality-aware policies read per-server residency and fetch
         # costs through this; None = no registry attached
@@ -65,9 +71,14 @@ class PlannerState:
         S, R = len(servers), len(RESOURCES)
         self.capacity = np.array(
             [[s.capacity[r] for r in RESOURCES] for s in servers],
-            dtype=np.float64).reshape(S, R)
-        self.free = np.zeros((S, R), dtype=np.float64)
+            dtype=self.dtype).reshape(S, R)
+        self.free = np.zeros((S, R), dtype=self.dtype)
         self.alive = np.zeros(S, dtype=bool)
+        # maintained per-row normalized headroom (min over resources):
+        # recomputed for dirty rows in sync() so worst_fit never
+        # re-divides the full (S, R) matrices per placement attempt
+        self.head = np.zeros(S, dtype=self.dtype)
+        self._alive_cache: Optional[np.ndarray] = None
         sites = []
         site_idx: Dict[str, int] = {}
         for s in servers:
@@ -79,6 +90,7 @@ class PlannerState:
                                 dtype=np.int64)
         self._dirty = set(range(S))
         self._structure_stale = False
+        self._alive_cache = None
 
     def _on_change(self, server_id: str):
         i = self.sidx.get(server_id)
@@ -97,9 +109,22 @@ class PlannerState:
         n = len(self._dirty)
         for i in self._dirty:
             srv = self.cluster.servers[self.server_ids[i]]
-            for j, r in enumerate(RESOURCES):
-                self.free[i, j] = srv.free(r)
-            self.alive[i] = srv.alive
+            # accumulate cached per-variant demand vectors instead of
+            # Server.free's per-resource dict-building genexpr: same
+            # instances, same iteration order, same left-to-right
+            # float64 adds per component — bit-identical row values
+            used = np.zeros(len(RESOURCES), np.float64)
+            for inst in srv.instances.values():
+                if inst.role != "cold":
+                    used += inst.variant.demand_vec
+            self.free[i] = np.array(
+                [srv.capacity[r] for r in RESOURCES], np.float64) - used
+            # same per-row math worst_fit used to run over the full
+            # matrix: min over resources of free/capacity
+            self.head[i] = (self.free[i] / self.capacity[i]).min()
+            if self.alive[i] != srv.alive:
+                self.alive[i] = srv.alive
+                self._alive_cache = None
         self._dirty.clear()
         return n
 
@@ -110,8 +135,11 @@ class PlannerState:
 
     def alive_rows(self) -> np.ndarray:
         """Row indices of alive servers, in cluster order (the legacy
-        `alive_servers()` iteration order)."""
-        return np.flatnonzero(self.alive)
+        `alive_servers()` iteration order). Cached; invalidated when a
+        sync flips any row's liveness."""
+        if self._alive_cache is None:
+            self._alive_cache = np.flatnonzero(self.alive)
+        return self._alive_cache
 
     def mask_of(self, server_ids: Iterable[str], rows: np.ndarray,
                 ) -> np.ndarray:
@@ -125,29 +153,35 @@ class PlannerState:
                 out[pos[i]] = True
         return out
 
-    def worst_fit(self, demand: Dict[str, float],
-                  excluded: Iterable[str] = ()) -> Optional[str]:
+    def worst_fit(self, demand, excluded: Iterable[str] = ()
+                  ) -> Optional[str]:
         """Most-headroom alive server fitting `demand` (Alg. 1 line 9);
-        first-maximum tie-break, matching the legacy loop."""
+        first-maximum tie-break, matching the legacy loop.
+
+        `demand` is a resource dict or a prebuilt `RESOURCES`-ordered
+        vector (`Variant.demand_vec` — the hot failover path passes the
+        cached array). Runs one fused feasibility pass over the full
+        matrix against the maintained headroom column: no row gather,
+        no per-call division, no per-call demand-vector rebuild. The
+        old defensive total-free budget check is gone — free is
+        non-negative, so the sum can never bind when any per-server fit
+        passes."""
         self.sync()
-        rows = self.alive_rows()
-        if rows.size == 0:
-            return None
-        d = np.array([demand[r] for r in RESOURCES], dtype=np.float64)
-        free = self.free[rows]
-        # global budget: with no α-reserve this equals total free, which
-        # can never bind when a per-server fit passes (free is
-        # non-negative); kept as a cheap defensive vectorized check
-        if (free.sum(axis=0) < d - _EPS).any():
-            return None
-        feas = (free >= d - _EPS).all(axis=1)
-        if excluded:
-            feas &= ~self.mask_of(excluded, rows)
+        d = (demand if isinstance(demand, np.ndarray)
+             else np.array([demand[r] for r in RESOURCES],
+                           dtype=np.float64))
+        feas = self.alive & (self.free >= d - _EPS).all(axis=1)
+        for sid in excluded:
+            i = self.sidx.get(sid) if sid else None
+            if i is not None:
+                feas[i] = False
         if not feas.any():
             return None
-        head = (free / self.capacity[rows]).min(axis=1)
-        i = int(np.argmax(np.where(feas, head, -np.inf)))
-        return self.server_ids[int(rows[i])]
+        # full-row masked argmax: first maximum among feasible rows in
+        # ascending row order — the same winner the gathered sub-array
+        # argmax picked
+        i = int(np.argmax(np.where(feas, self.head, -np.inf)))
+        return self.server_ids[i]
 
     def scratch(self, reserve_frac: float = 0.0) -> "ScratchView":
         return ScratchView(self, reserve_frac=reserve_frac)
@@ -190,7 +224,11 @@ class ScratchView:
             [(1.0 - reserve_frac) * _ordered_sum(self.free[:, j])
              for j in range(len(RESOURCES))], dtype=np.float64)
 
-    def _vec(self, demand: Dict[str, float]) -> np.ndarray:
+    def _vec(self, demand) -> np.ndarray:
+        """Demand dict -> vector; prebuilt vectors (`Variant.demand_vec`)
+        pass straight through."""
+        if isinstance(demand, np.ndarray):
+            return demand
         return np.array([demand[r] for r in RESOURCES], dtype=np.float64)
 
     def fits(self, sid: str, demand: Dict[str, float]) -> bool:

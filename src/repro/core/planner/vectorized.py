@@ -39,8 +39,9 @@ _EPS = 1e-9
 
 
 def _demand_matrix(app: Application) -> np.ndarray:
-    return np.array([[v.demand[r] for r in RESOURCES]
-                     for v in app.variants], dtype=np.float64)
+    # delegates to the per-app cache; kept as the module-level helper
+    # other planners import
+    return app.demand_matrix()
 
 
 def plan_greedy(apps: List[Application], cluster: Optional[Cluster] = None,
@@ -51,7 +52,8 @@ def plan_greedy(apps: List[Application], cluster: Optional[Cluster] = None,
                 alpha: float = 0.0,
                 latency_fn=None,
                 score_fn=None,
-                tiebreak_fn=None) -> HeuristicResult:
+                tiebreak_fn=None,
+                site_index=None) -> HeuristicResult:
     """Vectorized Algorithm 1 over a (persistent or throwaway)
     `PlannerState`.
 
@@ -63,6 +65,14 @@ def plan_greedy(apps: List[Application], cluster: Optional[Cluster] = None,
     the locality policy ranks quantized headroom and tie-breaks on
     checkpoint fetch time. None (the default) keeps argmax's
     first-maximum rule, i.e. the legacy bit-exact behavior.
+
+    `site_index` is a factory (e.g. `sharded.SiteIndex`) building a
+    site-hierarchical selection structure over the alive rows; when
+    given, the worst-fit argmax is answered by `index.select` (scanning
+    only the top sites by maintained per-site headroom) instead of the
+    full-matrix masked argmax — bit-identical winners, sublinear
+    per-attempt work (see planner/sharded.py). Only valid with the
+    default rank (no score/tiebreak/latency customization).
     """
     t0 = time.time()
     exclude = exclude or {}
@@ -84,33 +94,42 @@ def plan_greedy(apps: List[Application], cluster: Optional[Cluster] = None,
                                eq1_objective(assignment, apps))
 
     ids = [state.server_ids[int(i)] for i in rows]
-    servers = [cluster.servers[sid] for sid in ids]
     free = state.free[rows].copy()               # (S, R) working copy
     cap = state.capacity[rows]
     R = len(RESOURCES)
 
-    # Lines 2-4: capacity ratio δ (ordered sums = legacy bit-parity)
+    # Lines 2-4: capacity ratio δ (ordered sums = legacy bit-parity);
+    # full-size demands come from the cached per-variant vectors, and
+    # _ordered_sum replays builtin sum()'s left-to-right accumulation
+    full_dem = np.array([a.full.demand_vec for a in apps],
+                        dtype=np.float64).reshape(len(apps), R)
     C = [_ordered_sum(free[:, j]) for j in range(R)]
-    D = [sum(a.full.demand[r] for a in apps) for r in RESOURCES]
+    D = [_ordered_sum(full_dem[:, j]) for j in range(R)]
     delta = min((C[j] / D[j]) if D[j] > 0 else 1.0 for j in range(R))
     budget = np.array([(1.0 - alpha) * C[j] for j in range(R)],
                       dtype=np.float64)
 
-    # per-app arrays: variant demands, allowed-server mask, latency mask
+    # per-app arrays: variant demands (cached on the Application),
+    # sparse excluded-row lists (a dense (A, S) bool mask is ~1 GB at
+    # 100k apps x 10k servers; exclusions are a handful of rows per
+    # app), and the optional latency mask
     dm = {a.id: _demand_matrix(a) for a in apps}
-    allowed: Dict[str, np.ndarray] = {}
+    excl_rows: Dict[str, np.ndarray] = {}
     lat: Dict[str, Optional[np.ndarray]] = {}
     pos = {sid: k for k, sid in enumerate(ids)}
+    servers = ([cluster.servers[sid] for sid in ids]
+               if latency_fn is not None else None)
     for app in apps:
-        mask = np.ones(S, dtype=bool)
+        er: List[int] = []
         for sid in exclude.get(app.id, ()):
             if sid and sid in pos:
-                mask[pos[sid]] = False
+                er.append(pos[sid])
         for site in site_exclude.get(app.id, ()):
             for sid in cluster.sites.get(site, ()):
                 if sid in pos:
-                    mask[pos[sid]] = False
-        allowed[app.id] = mask
+                    er.append(pos[sid])
+        if er:
+            excl_rows[app.id] = np.array(sorted(set(er)), dtype=np.int64)
         if latency_fn is None:
             lat[app.id] = None
         else:
@@ -129,8 +148,6 @@ def plan_greedy(apps: List[Application], cluster: Optional[Cluster] = None,
         counts = [len(a.variants) for a in apps]
         offs = np.concatenate([[0], np.cumsum(counts)])
         all_dem = np.concatenate([dm[a.id] for a in apps])     # (T, R)
-        full_dem = np.array([[a.full.demand[r] for r in RESOURCES]
-                             for a in apps], dtype=np.float64)
         thr = np.repeat(delta * full_dem + _EPS, counts, axis=0)
         okv = (all_dem <= thr).all(axis=1)
         for k, app in enumerate(apps):
@@ -142,39 +159,54 @@ def plan_greedy(apps: List[Application], cluster: Optional[Cluster] = None,
     chosen: Dict[str, tuple] = {}     # app -> (variant idx, server row)
     unplaced: List[str] = []
     headroom = (free / cap).min(axis=1)          # maintained per take
+    sindex = None
+    if site_index is not None:
+        assert score_fn is None and tiebreak_fn is None \
+            and latency_fn is None, \
+            "site-sharded selection requires the default worst-fit rank"
+        sindex = site_index(state.site_of[rows], headroom)
 
     # Lines 7-12: degrade + worst-fit, vectorized over servers
     for app in order:
         d_app = dm[app.id]
-        base = allowed[app.id]
+        er = excl_rows.get(app.id)
         lm = lat[app.id]
         placed = False
         for j in range(start[app.id], len(app.variants)):
             d = d_app[j]
             if not (budget >= d - _EPS).all():
                 continue              # α-budget binds every server alike
-            feas = base & (free >= d - _EPS).all(axis=1)
-            if lm is not None:
-                feas &= lm[j]
-            if not feas.any():
-                continue
-            if score_fn is None:
-                rank = headroom
+            if sindex is not None:
+                k = sindex.select(free, headroom, d, er)
+                if k < 0:
+                    continue
             else:
-                rank = score_fn(free, cap, d, app)
-            masked = np.where(feas, rank, -np.inf)
-            k = int(np.argmax(masked))
-            if tiebreak_fn is not None:
-                ties = np.flatnonzero(masked == masked[k])
-                if ties.size > 1:
-                    tb = np.asarray(
-                        tiebreak_fn(app, app.variants[j],
-                                    [ids[int(t)] for t in ties]),
-                        dtype=np.float64)
-                    k = int(ties[int(np.argmin(tb))])
+                feas = (free >= d - _EPS).all(axis=1)
+                if er is not None:
+                    feas[er] = False
+                if lm is not None:
+                    feas &= lm[j]
+                if not feas.any():
+                    continue
+                if score_fn is None:
+                    rank = headroom
+                else:
+                    rank = score_fn(free, cap, d, app)
+                masked = np.where(feas, rank, -np.inf)
+                k = int(np.argmax(masked))
+                if tiebreak_fn is not None:
+                    ties = np.flatnonzero(masked == masked[k])
+                    if ties.size > 1:
+                        tb = np.asarray(
+                            tiebreak_fn(app, app.variants[j],
+                                        [ids[int(t)] for t in ties]),
+                            dtype=np.float64)
+                        k = int(ties[int(np.argmin(tb))])
             free[k] -= d
             budget -= d
             headroom[k] = (free[k] / cap[k]).min()
+            if sindex is not None:
+                sindex.update(k, headroom)
             assignment[app.id] = (app.variants[j], ids[k])
             chosen[app.id] = (j, k)
             placed = True
@@ -206,6 +238,8 @@ def plan_greedy(apps: List[Application], cluster: Optional[Cluster] = None,
             free[k] -= d_app[j_up]
             budget -= d_app[j_up]
             headroom[k] = (free[k] / cap[k]).min()
+            if sindex is not None:
+                sindex.update(k, headroom)
             assignment[app.id] = (app.variants[j_up], ids[k])
             chosen[app.id] = (j_up, k)
 

@@ -63,6 +63,8 @@ class EventQueue:
         self.clock = clock
         self._q: List[Tuple[float, int, Callable[[], None]]] = []
         self._c = itertools.count()
+        # events drained so far (bench_scale's events/sec numerator)
+        self.n_processed = 0
 
     def at(self, t: float, fn: Callable[[], None]):
         heapq.heappush(self._q, (t, next(self._c), fn))
@@ -70,10 +72,16 @@ class EventQueue:
     def after(self, dt: float, fn: Callable[[], None]):
         self.at(self.clock.now() + dt, fn)
 
+    def next_time(self) -> Optional[float]:
+        """Earliest pending event time, or None when the heap is empty
+        (the epoch folder peeks at this to size event-free spans)."""
+        return self._q[0][0] if self._q else None
+
     def run_until(self, t_end: float):
         while self._q and self._q[0][0] <= t_end:
             t, _, fn = heapq.heappop(self._q)
             self.clock.t = max(self.clock.t, t)
+            self.n_processed += 1
             fn()
         self.clock.t = max(self.clock.t, t_end)
 
@@ -276,6 +284,16 @@ class SimConfig:
     # ExperimentSpec). None/enabled=False = bit-exact historical
     # request plane (golden fingerprints pinned)
     resilience: Optional[dict] = None
+    # event-loop drain strategy (docs/SCALE.md): "epoch" folds
+    # event-free spans of traffic chunks into vectorized bulk
+    # generation (bit-exact with per-event, proven by
+    # tests/test_scale.py); "per-event" is the historical
+    # one-callback-per-chunk compat path and the bench baseline
+    event_mode: str = "epoch"
+    # planner array dtype: "float64" (bit-exact default) or "float32"
+    # (halves PlannerState memory at 10k servers; NOT fingerprint-
+    # preserving — scale runs only)
+    planner_dtype: str = "float64"
 
 
 def synthetic_apps(cfg: SimConfig, rng: random.Random,
@@ -386,13 +404,15 @@ class Simulation:
             pilot = AutopilotPolicy(AutopilotConfig(
                 diurnal_amplitude=cfg.traffic_diurnal_amplitude,
                 diurnal_period=cfg.traffic_diurnal_period))
+        if cfg.event_mode not in ("epoch", "per-event"):
+            raise ValueError(f"unknown event_mode: {cfg.event_mode!r}")
         self.controller = FailLiteController(
             self.cluster, self.clock, self.executor,
             policy=cfg.policy, alpha=cfg.alpha,
             site_independence=cfg.site_independence, use_ilp=cfg.use_ilp,
             planner=cfg.planner, detector=self.detector,
             registry=self.registry, scheduler=cfg.scheduler,
-            autopilot=pilot)
+            autopilot=pilot, planner_dtype=cfg.planner_dtype)
         self.apps = apps if apps is not None else synthetic_apps(
             cfg, self.rng)
         # per-server "other tenants" reservation, recorded at setup so a
@@ -412,7 +432,8 @@ class Simulation:
                     chunk_s=cfg.traffic_chunk_s,
                     diurnal_amplitude=cfg.traffic_diurnal_amplitude,
                     diurnal_period=cfg.traffic_diurnal_period),
-                resilience=self.resilience)
+                resilience=self.resilience,
+                batch=(cfg.event_mode == "epoch"))
             self.controller.routing.observer = self._on_route_set
             self.controller.routing.drop_observer = self._on_route_drop
             if self.resilience is not None:
@@ -496,19 +517,50 @@ class Simulation:
         }
 
     def _start_traffic(self, t_end: float):
-        """Schedule the chunked bulk-generation loop up to t_end."""
+        """Schedule the chunked bulk-generation loop up to t_end.
+
+        Per-event mode fires one heap callback per chunk window (the
+        historical path, kept verbatim as the bench baseline). Epoch
+        mode folds runs of event-free chunk windows into one
+        `generate_chunks` call: a fold extends while the next pending
+        heap event lies STRICTLY past the window end — any event at
+        exactly t1 (or any state change at all inside the span) stops
+        the fold, so rates/eligibility are constant across folded
+        windows and the drain is bit-exact with per-event mode (no seq
+        numbers are consumed inside an event-free span, so the
+        stop-tick rescheduled at t1 orders identically to the
+        per-event reschedule; proven by tests/test_scale.py)."""
         if self.traffic is None:
             return
         chunk = self.traffic.cfg.chunk_s
 
-        def tick():
-            t0 = self.clock.now()
-            t1 = min(t0 + chunk, t_end)
-            self.traffic.generate_chunk(self.apps, t0, t1)
-            if t1 < t_end - 1e-12:
-                self.events.at(t1, tick)
+        if self.cfg.event_mode == "per-event":
+            def tick():
+                t0 = self.clock.now()
+                t1 = min(t0 + chunk, t_end)
+                self.traffic.generate_chunk(self.apps, t0, t1)
+                if t1 < t_end - 1e-12:
+                    self.events.at(t1, tick)
 
-        self.events.at(self.clock.now(), tick)
+            self.events.at(self.clock.now(), tick)
+            return
+
+        def epoch_tick():
+            tc = self.clock.now()
+            spans = []
+            while True:
+                t1 = min(tc + chunk, t_end)
+                spans.append((tc, t1))
+                if t1 >= t_end - 1e-12:
+                    break
+                nxt = self.events.next_time()
+                if nxt is not None and nxt <= t1:
+                    self.events.at(t1, epoch_tick)
+                    break
+                tc = t1
+            self.traffic.generate_chunks(self.apps, spans)
+
+        self.events.at(self.clock.now(), epoch_tick)
 
     def setup(self):
         """Place primaries, block non-headroom capacity, plan warm backups.
@@ -626,16 +678,24 @@ class Simulation:
         if mem > 0:
             self._place_blocker(server_id, mem)
 
+    def _traffic_dirty(self):
+        """App set or rates changed: invalidate the traffic plane's
+        epoch-mode eligibility snapshot."""
+        if self.traffic is not None:
+            self.traffic.snapshot_gen += 1
+
     def _on_arrival(self, app: Application, stats: dict):
         try:
             self.controller.deploy_primary(app)
             self.apps.append(app)
+            self._traffic_dirty()
         except ValueError:
             stats["unplaced_arrivals"] += 1
 
     def _on_departure(self, app_id: str):
         self.controller.handle_departure(app_id)
         self.apps = [a for a in self.apps if a.id != app_id]
+        self._traffic_dirty()
 
     def _on_spike(self, ev: LoadSpike):
         ids = set(ev.app_ids) if ev.app_ids is not None else None
@@ -644,10 +704,12 @@ class Simulation:
         saved = [(a, a.request_rate) for a in targets]
         for a in targets:
             a.request_rate *= ev.factor
+        self._traffic_dirty()
 
         def restore():
             for a, r in saved:
                 a.request_rate = r
+            self._traffic_dirty()
         self.events.after(ev.duration, restore)
 
     def run_scenario(self, scenario: Scenario, *,
@@ -687,13 +749,22 @@ class Simulation:
 
         t_end = scenario.horizon + settle
 
+        # memoized warm-bytes fold: the warm set only changes when the
+        # controller says so (warm_gen), so sweeps between mutations
+        # reuse the previous sum bit-for-bit instead of re-scanning
+        # every warm entry (a per-sweep O(apps) loop at 100k apps)
+        warm_cache = [-1, (0.0, 0)]
+
         def reprotect_tick():
             self.controller.reprotect()
             # pure observation for the headroom trend; no event/RNG state
-            self._warm_samples.append(
-                (float(sum(v.mem_bytes for v, _, _
-                           in self.controller.warm.values())),
-                 len(self.controller.warm)))
+            if warm_cache[0] != self.controller.warm_gen:
+                warm_cache[0] = self.controller.warm_gen
+                warm_cache[1] = (
+                    float(sum(v.mem_bytes for v, _, _
+                              in self.controller.warm.values())),
+                    len(self.controller.warm))
+            self._warm_samples.append(warm_cache[1])
             if self.clock.now() + reprotect_every <= t_end:
                 self.events.after(reprotect_every, reprotect_tick)
 

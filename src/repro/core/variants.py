@@ -17,6 +17,8 @@ import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from repro.models.config import ModelConfig
 
 ACC_EXP = 0.012          # Fig 2a calibration: acc = capacity_ratio ** k
@@ -40,6 +42,22 @@ class Variant:
     @property
     def demand(self) -> Dict[str, float]:
         return {"mem": self.mem_bytes, "compute": self.compute}
+
+    @property
+    def demand_vec(self):
+        """Cached demand vector in `cluster.RESOURCES` order
+        (("mem", "compute") — asserted by tests/test_scale.py).
+
+        `demand` builds a fresh dict per access, and the planner's
+        worst-fit rebuilt an array from it once per placement attempt
+        on the failover hot path; this caches the array on the frozen
+        instance instead. Variants are immutable, so the cache can
+        never go stale — treat the returned array as read-only."""
+        v = self.__dict__.get("_demand_vec")
+        if v is None:
+            v = np.array([self.mem_bytes, self.compute], np.float64)
+            object.__setattr__(self, "_demand_vec", v)
+        return v
 
     def load_time(self, bw: float = LOAD_BW) -> float:
         return self.mem_bytes / bw + WARMUP_S
@@ -144,6 +162,18 @@ class Application:
             if v.name == name:
                 return v
         raise KeyError(name)
+
+    def demand_matrix(self) -> np.ndarray:
+        """Cached (n_variants, len(RESOURCES)) demand matrix, rows
+        large -> small — the planner's per-round `_demand_matrix`
+        rebuilt this on every call. The variants list is never mutated
+        after construction; treat the array as read-only."""
+        dm = self.__dict__.get("_demand_matrix")
+        if dm is None:
+            dm = np.array([[v.mem_bytes, v.compute] for v in self.variants],
+                          np.float64)
+            self.__dict__["_demand_matrix"] = dm
+        return dm
 
 
 def synthetic_family(name: str, full_mem: float, n_variants: int = 4,

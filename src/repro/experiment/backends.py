@@ -113,6 +113,7 @@ class SimBackend:
             traffic_diurnal_period=spec.traffic_diurnal_period,
             storage=spec.storage, scheduler=spec.scheduler,
             autopilot=spec.autopilot, resilience=spec.resilience,
+            event_mode=spec.event_mode, planner_dtype=spec.planner_dtype,
             load_bw=spec.load_bw, warmup_s=spec.warmup_s,
             nic_bw=spec.nic_bw, cloud_bw=spec.cloud_bw,
             replication=spec.replication)

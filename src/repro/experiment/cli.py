@@ -63,6 +63,15 @@ def _build_parser() -> argparse.ArgumentParser:
                      help="request-plane resilience toolkit with default "
                           "knobs: hedging, breakers, bulkheads, "
                           "admission (core/resilience.py, both backends)")
+    run.add_argument("--event-mode", default=None, dest="event_mode",
+                     choices=["epoch", "per-event"],
+                     help="sim event-loop drain: vectorized epoch folds "
+                          "(bit-exact default) or the historical "
+                          "per-event path (docs/SCALE.md)")
+    run.add_argument("--planner-dtype", default=None, dest="planner_dtype",
+                     choices=["float64", "float32"],
+                     help="planner array dtype; float32 halves planner "
+                          "memory for planet-scale runs (not bit-exact)")
     run.add_argument("--client-hz", type=float, default=None)
     run.add_argument("--settle", type=float, default=None,
                      dest="settle_s")
@@ -103,7 +112,7 @@ def _spec_from_args(args) -> "ExperimentSpec":
                  "traffic_rate_scale", "traffic_diurnal_amplitude",
                  "traffic_diurnal_period", "autopilot", "client_hz",
                  "settle_s", "time_scale", "storage", "scheduler",
-                 "load_bw", "warmup_s"):
+                 "load_bw", "warmup_s", "event_mode", "planner_dtype"):
         val = getattr(args, attr, None)
         if val is not None:
             overrides[attr] = val

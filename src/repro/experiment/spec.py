@@ -78,6 +78,12 @@ class ExperimentSpec:
     # ResilienceConfig as a plain dict ({"enabled": True} turns the
     # defaults on); None = historical request plane, bit-exact
     resilience: Optional[dict] = None
+    # planet-scale engine knobs (docs/SCALE.md): event-loop drain
+    # strategy ("epoch" = vectorized folds, bit-exact; "per-event" =
+    # historical compat/baseline) and planner array dtype ("float32"
+    # halves PlannerState memory; scale runs only, not bit-exact)
+    event_mode: str = "epoch"
+    planner_dtype: str = "float64"
     load_bw: float = LOAD_BW            # bytes/s disk->HBM (Fig. 2b)
     warmup_s: float = WARMUP_S          # per-instance warmup seconds
     nic_bw: Optional[float] = None      # preset overrides (None = keep)

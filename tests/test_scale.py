@@ -1,0 +1,266 @@
+"""Planet-scale engine: epoch-batched event drain, sharded planner,
+and the hot-loop caches — the bit-exactness property suite.
+
+Three claims are load-bearing for docs/SCALE.md and proven here:
+
+  1. the epoch-batched drain ("epoch", the default) reproduces the
+     per-event compat path's scenario fingerprints bit-for-bit — for
+     every named golden scenario AND for randomized chaos streams;
+  2. site-sharded worst-fit selection (planner/sharded.py) returns the
+     same assignment, unplaced set, and Eq. 1 objective as the dense
+     vectorized planner;
+  3. the demand-vector/demand-matrix caches agree with the RESOURCES
+     layout every planner array assumes.
+"""
+
+import hashlib
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import RESOURCES, make_cluster
+from repro.core.planner import (PlannerState, PlanRequest, SiteIndex,
+                                get_planner, plan_greedy)
+from repro.core.simulation import EventQueue, SimConfig, Simulation
+from repro.core.variants import Application, synthetic_family
+
+GOLDEN_CFG = dict(n_sites=4, servers_per_site=5, headroom=0.2,
+                  policy="faillite", seed=0)
+GOLDEN_SCENARIOS = ("cascade", "churn-under-failure", "flaky-node",
+                    "rolling-with-rejoin", "single-server", "site-outage")
+
+
+def _fingerprint(name, *, event_mode, seed=0, **cfg_over):
+    cfg = dict(GOLDEN_CFG, event_mode=event_mode, seed=seed, **cfg_over)
+    sim = Simulation(SimConfig(**cfg)).setup()
+    res = sim.run_named_scenario(name)
+    return hashlib.sha256(repr(res.fingerprint()).encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# 1. epoch drain == per-event drain, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", GOLDEN_SCENARIOS)
+def test_epoch_drain_matches_per_event_goldens(name):
+    """The six pinned scenarios (tests/test_modelstate.py) replay to the
+    same fingerprint under both drain strategies — the epoch engine
+    folds event-free chunk spans without moving a single RNG draw."""
+    assert _fingerprint(name, event_mode="epoch") \
+        == _fingerprint(name, event_mode="per-event")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_epoch_drain_matches_per_event_chaos(seed):
+    """Randomized churn (core/chaos.py) schedules events at arbitrary
+    times, exercising every fold/stop boundary of the epoch drain."""
+    assert _fingerprint("chaos", event_mode="epoch", seed=seed) \
+        == _fingerprint("chaos", event_mode="per-event", seed=seed)
+
+
+def test_epoch_drain_matches_with_diurnal_modulation():
+    # diurnal q depends on chunk start times — folding must keep them
+    over = dict(traffic_diurnal_amplitude=0.4,
+                traffic_diurnal_period=30.0)
+    assert _fingerprint("cascade", event_mode="epoch", **over) \
+        == _fingerprint("cascade", event_mode="per-event", **over)
+
+
+def test_bulk_stream_preserves_control_plane_and_volume():
+    """Above ``bulk_min_apps`` the epoch drain switches to vectorized
+    Poisson draws — a different RNG stream order, same traffic law.
+    Control-plane outcomes must stay identical (the traffic plane is
+    pure observation with resilience off), request volume must agree
+    statistically, and the bulk path must be deterministic per seed."""
+    def run(mode, bulk):
+        sim = Simulation(SimConfig(**dict(GOLDEN_CFG, event_mode=mode)))
+        if bulk:
+            sim.traffic.bulk_min_apps = 1      # force the bulk branch
+        sim.setup()
+        res = sim.run_named_scenario("site-outage")
+        return sim, res
+
+    sim_b, res_b = run("epoch", bulk=True)
+    sim_p, res_p = run("per-event", bulk=False)
+    assert res_b.overall["recovery_rate"] == res_p.overall["recovery_rate"]
+    assert len(res_b.records) == len(res_p.records)
+    assert res_b.n_apps_final == res_p.n_apps_final
+    nb, npe = sim_b.traffic.n_generated, sim_p.traffic.n_generated
+    assert nb > 0 and abs(nb - npe) / npe < 0.05
+    _, res_b2 = run("epoch", bulk=True)
+    assert res_b2.fingerprint() == res_b.fingerprint()
+
+
+def test_unknown_event_mode_rejected():
+    with pytest.raises(ValueError, match="event_mode"):
+        Simulation(SimConfig(event_mode="warp"))
+
+
+def test_event_queue_counts_processed_events():
+    from repro.core.simulation import SimClock
+
+    q = EventQueue(SimClock())
+    hits = []
+    q.at(1.0, lambda: hits.append(1))
+    q.at(2.0, lambda: hits.append(2))
+    assert q.next_time() == 1.0
+    q.run_until(5.0)
+    assert q.n_processed == 2 and hits == [1, 2]
+    assert q.next_time() is None
+
+
+def test_float32_planner_runs_end_to_end():
+    """Not fingerprint-preserving by design — but the scale dtype must
+    still recover everything the float64 run recovers."""
+    cfg = dict(GOLDEN_CFG, planner_dtype="float32")
+    sim = Simulation(SimConfig(**cfg)).setup()
+    assert sim.controller.state.capacity.dtype == np.float32
+    res = sim.run_named_scenario("single-server")
+    assert res.overall["recovery_rate"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# 2. sharded selection == dense selection
+# ---------------------------------------------------------------------------
+
+def _instance(n_apps, n_sites, per_site, seed):
+    rng = random.Random(seed)
+    cluster = make_cluster(n_sites, per_site, mem=48e9)
+    apps = []
+    for i in range(n_apps):
+        lad = synthetic_family(f"f{i}", rng.uniform(0.5e9, 4e9),
+                               n_variants=4)
+        apps.append(Application(id=f"a{i}", family=f"f{i}", variants=lad,
+                                request_rate=rng.uniform(0.5, 2.0),
+                                critical=rng.random() < 0.5))
+    return apps, cluster
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sharded_planner_matches_greedy_bit_for_bit(seed):
+    apps, cluster = _instance(120, 6, 8, seed)
+    dense = get_planner("greedy").plan(
+        PlanRequest(apps=apps, cluster=cluster, alpha=0.1))
+    sharded = get_planner("sharded").plan(
+        PlanRequest(apps=apps, cluster=cluster, alpha=0.1))
+    assert sharded.assignment == dense.assignment
+    assert sharded.unplaced == dense.unplaced
+    assert sharded.objective == dense.objective
+
+
+def test_sharded_matches_under_exclusions():
+    apps, cluster = _instance(60, 4, 6, seed=7)
+    exclude = {a.id: {cluster.alive_servers()[i % 4].id}
+               for i, a in enumerate(apps)}
+    site_exclude = {apps[0].id: {cluster.alive_servers()[0].site}}
+    kw = dict(exclude=exclude, site_exclude=site_exclude, alpha=0.1)
+    dense = plan_greedy(apps, cluster, **kw)
+    sharded = plan_greedy(apps, cluster, site_index=SiteIndex, **kw)
+    assert sharded.assignment == dense.assignment
+    assert sharded.unplaced == dense.unplaced
+    assert sharded.objective == dense.objective
+
+
+def test_sharded_matches_with_dead_servers_and_degenerate_sites():
+    apps, cluster = _instance(50, 5, 4, seed=3)
+    for s in cluster.alive_servers()[::3]:
+        cluster.fail_server(s.id)
+    dense = plan_greedy(apps, cluster, alpha=0.1)
+    sharded = plan_greedy(apps, cluster, site_index=SiteIndex, alpha=0.1)
+    assert sharded.assignment == dense.assignment
+    assert sharded.objective == dense.objective
+
+
+def test_site_index_select_equals_masked_argmax():
+    """Direct unit check of the selection invariant: first-maximum in
+    row order, under random feasibility/exclusion patterns."""
+    rng = np.random.default_rng(42)
+    for _ in range(50):
+        n = int(rng.integers(1, 40))
+        site_of = np.sort(rng.integers(0, 6, n))
+        free = rng.random((n, 2)) * 4.0
+        head = rng.random(n)
+        d = rng.random(2)
+        excl = np.flatnonzero(rng.random(n) < 0.2).astype(np.int64)
+        idx = SiteIndex(site_of, head)
+        got = idx.select(free, head, d, excl if excl.size else None)
+        feas = (free >= d - 1e-9).all(axis=1)
+        feas[excl] = False
+        want = (int(np.argmax(np.where(feas, head, -np.inf)))
+                if feas.any() else -1)
+        assert got == want
+
+
+def test_sharded_planner_registered_and_realtime():
+    p = get_planner("sharded")
+    assert p.realtime
+
+
+def test_full_scale_sim_runs_with_sharded_planner():
+    cfg = dict(GOLDEN_CFG, planner="sharded")
+    sim = Simulation(SimConfig(**cfg)).setup()
+    res = sim.run_named_scenario("single-server")
+    base = Simulation(SimConfig(**GOLDEN_CFG)).setup() \
+        .run_named_scenario("single-server")
+    assert res.fingerprint() == base.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# 3. cached demand layouts
+# ---------------------------------------------------------------------------
+
+def test_resources_layout_pinned():
+    # every cached demand vector hardcodes this order — fail loudly if
+    # the resource axes ever move
+    assert RESOURCES == ("mem", "compute")
+
+
+def test_variant_demand_vec_matches_resources_order():
+    lad = synthetic_family("f", 2e9, n_variants=3)
+    for v in lad:
+        vec = v.demand_vec
+        assert vec.dtype == np.float64
+        assert vec[RESOURCES.index("mem")] == v.mem_bytes
+        assert vec[RESOURCES.index("compute")] == v.compute
+        assert v.demand_vec is vec          # cached, not rebuilt
+
+
+def test_application_demand_matrix_cached_and_correct():
+    lad = synthetic_family("f", 2e9, n_variants=4)
+    app = Application(id="a", family="f", variants=lad)
+    M = app.demand_matrix()
+    assert M is app.demand_matrix()
+    assert M.shape == (4, len(RESOURCES))
+    for i, v in enumerate(app.variants):
+        assert M[i, 0] == v.mem_bytes and M[i, 1] == v.compute
+
+
+def test_worst_fit_accepts_vector_and_dict_identically():
+    _, cluster = _instance(0, 3, 4, seed=0)
+    st = PlannerState(cluster)
+    d = {"mem": 1e9, "compute": 0.05}
+    vec = np.array([1e9, 0.05])
+    assert st.worst_fit(d) == st.worst_fit(vec)
+    sid = st.worst_fit(vec)
+    assert sid in cluster.servers
+
+
+# ---------------------------------------------------------------------------
+# spec/CLI plumbing
+# ---------------------------------------------------------------------------
+
+def test_cli_plumbs_event_mode_and_planner_dtype():
+    from repro.experiment.cli import _build_parser, _spec_from_args
+
+    args = _build_parser().parse_args(
+        ["run", "--event-mode", "per-event",
+         "--planner-dtype", "float32"])
+    spec = _spec_from_args(args)
+    assert spec.event_mode == "per-event"
+    assert spec.planner_dtype == "float32"
+    # defaults survive when the flags are absent
+    args = _build_parser().parse_args(["run"])
+    spec = _spec_from_args(args)
+    assert spec.event_mode == "epoch"
+    assert spec.planner_dtype == "float64"

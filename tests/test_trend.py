@@ -112,7 +112,8 @@ def test_bench_kind_mismatch_fails():
 def test_committed_trend_files_self_compare_green():
     for name in ("BENCH_soak.json", "BENCH_mttr_smoke.json",
                  "BENCH_planner_smoke.json", "BENCH_resilience.json",
-                 "BENCH_resilience_smoke.json"):
+                 "BENCH_resilience_smoke.json", "BENCH_scale.json",
+                 "BENCH_scale_smoke.json"):
         doc = json.loads((ROOT / name).read_text())
         fails, matched = CT.compare(doc, copy.deepcopy(doc))
         assert not fails and matched > 0, (name, fails)
@@ -166,3 +167,20 @@ def test_resilience_rows_carry_every_gated_metric():
     arms = {(r["scenario"], r["resilience"]) for r in rows}
     for scenario in {r["scenario"] for r in rows}:
         assert (scenario, "on") in arms and (scenario, "off") in arms
+
+
+def test_scale_rows_carry_every_gated_metric():
+    """Key coherence for the scale gate: every committed scale trend
+    row (tools/bench_scale.py) must carry every metric and identity
+    key the 'scale' spec gates on — including the sentinel-bearing
+    speedup column on epoch-only cells."""
+    spec = CT.SPECS["scale"]
+    for name in ("BENCH_scale.json", "BENCH_scale_smoke.json"):
+        doc = json.loads((ROOT / name).read_text())
+        assert doc["bench"] == "scale"
+        rows = doc[spec.rows_key]
+        assert rows
+        gated = {m.key for m in spec.metrics}
+        for row in rows:
+            assert gated <= set(row), (name, gated - set(row))
+            assert set(spec.id_keys) <= set(row)

@@ -89,6 +89,20 @@ SPECS: Dict[str, BenchSpec] = {
             Metric("latency_p99_ms", "lower", rel_tol=0.20, abs_tol=25.0),
             Metric("client_p99_ms", "lower", rel_tol=0.25, abs_tol=50.0),
         )),
+    # bench_scale cells (servers x apps): placements/recoveries are
+    # deterministic and exact; throughput + planning wall are
+    # wall-clock and machine-dependent -> very loose bands
+    "scale": BenchSpec(
+        rows_key="cells",
+        id_keys=("n_servers", "n_apps"),
+        metrics=(
+            Metric("n_apps_placed", "equal"),
+            Metric("recovery_rate", "higher", abs_tol=0.02),
+            Metric("events_per_sec", "higher", rel_tol=0.8),
+            Metric("speedup", "higher", rel_tol=0.8),
+            Metric("plan_wall_peak_s", "lower", rel_tol=2.0,
+                   abs_tol=0.05),
+        )),
     # bench_planner heuristic points: parity/placements are exact;
     # speedup is wall-clock and machine-dependent -> very loose band
     "planner": BenchSpec(

@@ -1,0 +1,145 @@
+#!/usr/bin/env python
+"""Profile any ExperimentSpec — the hot-loop hunting harness.
+
+Runs one experiment under cProfile (or pyinstrument when available and
+requested), prints the top-N functions by cumulative time, and dumps a
+binary ``.prof`` stats file that flamegraph tooling understands
+(``snakeviz out.prof`` / ``flameprof out.prof > flame.svg``):
+
+    PYTHONPATH=src python tools/profile_sim.py --smoke
+    PYTHONPATH=src python tools/profile_sim.py \
+        --scenario cascade --set n_sites=10 --set servers_per_site=20 \
+        --set event_mode=per-event -n 30 --out perevent.prof
+
+Any ExperimentSpec field is reachable via ``--set key=value`` (values
+parse as JSON first, then fall back to plain strings), so the harness
+profiles exactly what `repro run` would execute — this is how the
+per-event hot loops (per-chunk demand-vector rebuilds, per-app dict
+scans, per-request classification) were found and killed for the
+epoch-batched engine (docs/SCALE.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import cProfile
+import json
+import pstats
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def parse_sets(pairs):
+    """``--set key=value`` -> {key: parsed}; values are JSON when they
+    parse (ints, floats, bools, lists, dicts), raw strings otherwise."""
+    out = {}
+    for pair in pairs:
+        key, sep, val = pair.partition("=")
+        if not sep:
+            raise SystemExit(f"--set needs key=value, got {pair!r}")
+        try:
+            out[key] = json.loads(val)
+        except json.JSONDecodeError:
+            out[key] = val
+    return out
+
+
+def build_spec(args):
+    from repro.experiment.spec import ExperimentSpec
+
+    spec = (ExperimentSpec.smoke(args.backend or "sim") if args.smoke
+            else ExperimentSpec(backend=args.backend or "sim"))
+    overrides = parse_sets(args.set)
+    if args.scenario:
+        overrides["scenario"] = args.scenario
+    if args.seed is not None:
+        overrides["seed"] = args.seed
+    return spec.with_(**overrides)
+
+
+def profile_cprofile(spec, top_n: int, sort: str, out: str):
+    from repro.experiment.backends import run_experiment
+
+    prof = cProfile.Profile()
+    t0 = time.perf_counter()
+    prof.enable()
+    res = run_experiment(spec)
+    prof.disable()
+    wall = time.perf_counter() - t0
+
+    stats = pstats.Stats(prof, stream=sys.stdout)
+    stats.sort_stats(sort).print_stats(top_n)
+    if out:
+        stats.dump_stats(out)
+        print(f"wrote {out} (snakeviz/flameprof-compatible)")
+    return res, wall
+
+
+def profile_pyinstrument(spec, out: str):
+    from pyinstrument import Profiler
+
+    from repro.experiment.backends import run_experiment
+
+    profiler = Profiler()
+    t0 = time.perf_counter()
+    profiler.start()
+    res = run_experiment(spec)
+    profiler.stop()
+    wall = time.perf_counter() - t0
+    print(profiler.output_text(unicode=True, color=False))
+    if out:
+        Path(out).write_text(profiler.output_html())
+        print(f"wrote {out} (open in a browser)")
+    return res, wall
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="profile one ExperimentSpec run")
+    ap.add_argument("--backend", default=None, choices=["sim", "testbed"])
+    ap.add_argument("--scenario", default=None)
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="start from the reduced CI preset")
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="override any ExperimentSpec field (repeatable)")
+    ap.add_argument("-n", "--top", type=int, default=25,
+                    help="rows of the stats table to print")
+    ap.add_argument("--sort", default="cumulative",
+                    choices=["cumulative", "tottime", "ncalls"],
+                    help="pstats sort column")
+    ap.add_argument("--out", default="profile_sim.prof",
+                    help="stats dump path ('' disables); .prof for "
+                         "cProfile, .html for --pyinstrument")
+    ap.add_argument("--pyinstrument", action="store_true",
+                    help="use pyinstrument's sampling tree when the "
+                         "package is importable (falls back to cProfile)")
+    args = ap.parse_args()
+
+    spec = build_spec(args)
+    print(f"profiling: backend={spec.backend} scenario={spec.scenario} "
+          f"event_mode={spec.event_mode} seed={spec.seed}")
+
+    if args.pyinstrument:
+        try:
+            res, wall = profile_pyinstrument(spec, args.out)
+        except ImportError:
+            print("pyinstrument not installed; falling back to cProfile")
+            res, wall = profile_cprofile(spec, args.top, args.sort,
+                                         args.out)
+    else:
+        res, wall = profile_cprofile(spec, args.top, args.sort, args.out)
+
+    t = res.traffic
+    n_req = t.n_offered if t is not None else 0
+    print(f"run: {wall:.2f}s wall, {n_req} requests, "
+          f"{len(res.records)} recovery record(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
