@@ -34,7 +34,8 @@ def run(quick: bool = True, backend: str = "sim"):
     if quick:
         # keep every *required* scenario class, one representative each
         names = ["single-server", "site-outage", "cascade",
-                 "rolling-with-rejoin", "churn-under-failure"]
+                 "rolling-with-rejoin", "churn-under-failure",
+                 "tp-shard-storm"]
     if backend == "testbed":
         # live workers: compile-bound loads make the full matrix hours;
         # sweep the base case across policies at the smoke scale
@@ -82,6 +83,25 @@ def run(quick: bool = True, backend: str = "sim"):
                       f"{t.goodput:.5f},{t.n_degraded},"
                       f"{t.n_slo_violated},{t.latency_p50*1e3:.1f},"
                       f"{t.latency_p99*1e3:.1f}")
+
+    if backend != "testbed":
+        # shard recovery ladder on tp-shard-storm (the tp_degree=1 sweep
+        # above exercises ShardFail's monolith semantics; this cell
+        # exercises the actual shard plane, core/shardgroup.py)
+        print("# scenarios-shard: tp_degree,shard_policy,availability,"
+              "client_mttr_ms,n_degrade,n_reshard,n_monolith")
+        for policy in ("degrade", "reshard", "monolith"):
+            res = run_experiment(base.with_(
+                scenario="tp-shard-storm", storage="edge",
+                tp_degree=2, shard_policy=policy))
+            t, shard = res.traffic, res.extras.get("shard", {})
+            acts = shard.get("actions", {})
+            print(f"scenarios-shard,2,{policy},"
+                  f"{t.availability:.5f},"
+                  f"{_ms(t.client_mttr_avg):.1f},"
+                  f"{acts.get('shard-degrade', 0)},"
+                  f"{acts.get('shard-reshard', 0)},"
+                  f"{acts.get('shard-monolith', 0)}")
 
 
 if __name__ == "__main__":

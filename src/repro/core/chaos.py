@@ -31,7 +31,7 @@ from typing import List
 from repro.core.cluster import Cluster
 from repro.core.scenario import (LinkDegrade, LoadSpike, Scenario,
                                  ScenarioEvent, ServerFail, ServerRejoin,
-                                 SiteFail)
+                                 ShardFail, SiteFail)
 
 
 @dataclass(frozen=True)
@@ -45,6 +45,10 @@ class ChaosConfig:
     w_site_fail: float = 0.08
     w_spike: float = 0.22
     w_link_degrade: float = 0.25
+    # shard-host kills (ShardFail). 0.0 by default so every existing
+    # chaos stream is bit-identical; raise it on tp_degree>=2 configs
+    # to fold shard failures into the soak mixture.
+    w_shard_fail: float = 0.0
     rejoin_min_s: float = 6.0     # crash downtime bounds
     rejoin_max_s: float = 18.0
     site_stagger_s: float = 2.0   # extra rejoin delay per site member
@@ -61,7 +65,7 @@ def chaos_events(cluster: Cluster, rng: random.Random,
                  cfg: ChaosConfig = ChaosConfig()) -> List[ScenarioEvent]:
     """One randomized churn stream over `cluster`, seeded by `rng`."""
     weights = (cfg.w_server_fail, cfg.w_site_fail, cfg.w_spike,
-               cfg.w_link_degrade)
+               cfg.w_link_degrade, cfg.w_shard_fail)
     total_w = sum(weights)
     events: List[ScenarioEvent] = []
     down_until = {sid: 0.0 for sid in cluster.servers}
@@ -100,7 +104,8 @@ def chaos_events(cluster: Cluster, rng: random.Random,
             events.append(LoadSpike(
                 t=t, factor=rng.uniform(cfg.spike_lo, cfg.spike_hi),
                 duration=cfg.spike_duration_s))
-        else:                                          # link degrade
+        elif roll < (weights[0] + weights[1] + weights[2]
+                     + weights[3]):                    # link degrade
             if rng.random() < 0.5:
                 link = "cloud"
             else:
@@ -109,6 +114,16 @@ def chaos_events(cluster: Cluster, rng: random.Random,
                 t=t, link=link,
                 factor=rng.uniform(cfg.degrade_lo, cfg.degrade_hi),
                 duration=cfg.degrade_duration_s))
+        else:                                          # shard-host kill
+            # only reachable when w_shard_fail > 0 (roll < total_w);
+            # same crash/rejoin bookkeeping as a server crash
+            if not alive or n_down + 1 > max_down:
+                continue
+            sid = rng.choice(alive)
+            dt = rng.uniform(cfg.rejoin_min_s, cfg.rejoin_max_s)
+            events.append(ShardFail(t=t, server=sid))
+            events.append(ServerRejoin(t=t + dt, server=sid))
+            down_until[sid] = t + dt
     return events
 
 
@@ -120,7 +135,8 @@ def build_chaos(cluster: Cluster, rng: random.Random,
     soak's recovery metrics vacuous, so a deterministic fallback crash
     is injected."""
     events = chaos_events(cluster, rng, cfg)
-    if not any(isinstance(e, (ServerFail, SiteFail)) for e in events):
+    if not any(isinstance(e, (ServerFail, SiteFail, ShardFail))
+               for e in events):
         sid = sorted(cluster.servers)[0]
         events.append(ServerFail(t=cfg.t0, server=sid))
         events.append(ServerRejoin(t=cfg.t0 + cfg.rejoin_min_s,

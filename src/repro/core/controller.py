@@ -397,6 +397,14 @@ class FailLiteController:
         # returning {app_id: AppSignal} at the current instant.
         self.autopilot = autopilot
         self.metrics_feed: Optional[Callable[[], Dict]] = None
+        # shard plane (core/shardgroup.py): None = no tensor-parallel
+        # groups, bit-exact historical behavior. When attached, grouped
+        # apps are intercepted in `handle_failures` and walked through
+        # the shard recovery ladder instead of the warm/cold split.
+        self.shards = None
+
+    def attach_shard_manager(self, manager) -> None:
+        self.shards = manager
 
     @property
     def epoch(self) -> int:
@@ -459,7 +467,20 @@ class FailLiteController:
                                           "variant": app.full.name})
         return server_id
 
+    def _shard_protected(self, app_id: str) -> bool:
+        """True while the app is protected by a live/degraded/resharding
+        shard group — such apps get no warm monolith backups (their
+        protection IS the shard ladder); a fallen-back group's app
+        re-enters normal warm planning."""
+        return self.shards is not None and self.shards.is_grouped(app_id)
+
     def _warm_candidates(self) -> List[Application]:
+        if self.shards is not None:
+            return [a for a in self._warm_candidates_base()
+                    if not self.shards.is_grouped(a.id)]
+        return self._warm_candidates_base()
+
+    def _warm_candidates_base(self) -> List[Application]:
         if (self.autopilot is not None
                 and getattr(self.autopilot, "protected", None) is not None
                 and self.policy == "faillite"):
@@ -567,12 +588,26 @@ class FailLiteController:
             # apps are re-planned by this epoch or the reprotect loop
             self.scheduler.reset_server(sid)
 
+        records: Dict[str, RecoveryRecord] = {}
+
+        # shard plane first: grouped apps (member slices carry role
+        # "shard"; their reshard loads carry role "loading" too) are
+        # walked through the shard recovery ladder and excluded from
+        # the warm/cold split below. No-op when no manager is attached.
+        grouped: Set[str] = set()
+        if self.shards is not None:
+            grouped = {aid for aid in self.apps
+                       if self.shards.is_grouped(aid)}
+            records.update(self.shards.handle_lost(failed_set, t_fail,
+                                                   t_detect))
+
         # Apps hit by this epoch: lost their serving primary OR an
         # in-flight recovery load (role "loading" from a prior epoch).
         affected_ids: List[str] = []
         for inst in lost:
             if (inst.role in ("primary", "loading")
                     and inst.app_id in self.apps
+                    and inst.app_id not in grouped
                     and inst.app_id not in affected_ids):
                 affected_ids.append(inst.app_id)
         affected = [self.apps[a] for a in affected_ids]
@@ -587,8 +622,6 @@ class FailLiteController:
                     or key not in self.cluster.servers[sid].instances):
                 self._warm_del(app_id)
                 self.ds.delete(f"warm/{app_id}")
-
-        records: Dict[str, RecoveryRecord] = {}
 
         # (a) warm switch for apps that still have a live warm backup
         cold_apps: List[Application] = []
@@ -796,6 +829,8 @@ class FailLiteController:
     def handle_departure(self, app_id: str):
         """App leaves: release every replica and forget its bookkeeping."""
         self._bump(app_id)
+        if self.shards is not None:
+            self.shards.forget(app_id)
         app = self.apps.pop(app_id, None)
         if self.registry is not None and app is not None:
             # arch-mix siblings share variant names: keep checkpoints
@@ -1040,7 +1075,8 @@ class FailLiteController:
         crit = [a for a in self.apps.values() if a.critical
                 and self.primaries.get(a.id) in self.cluster.servers
                 and self.cluster.servers[self.primaries[a.id]].alive]
-        return (sum(1 for a in crit if a.id in self.warm) / len(crit)
+        return (sum(1 for a in crit if a.id in self.warm
+                    or self._shard_protected(a.id)) / len(crit)
                 if crit else 1.0)
 
     def summarize(self, records=None) -> Dict[str, float]:

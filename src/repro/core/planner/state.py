@@ -183,6 +183,42 @@ class PlannerState:
         i = int(np.argmax(np.where(feas, self.head, -np.inf)))
         return self.server_ids[i]
 
+    def place_group(self, demand, k: int, excluded: Iterable[str] = ()
+                    ) -> Optional[List[str]]:
+        """Pick k *distinct* alive servers each fitting `demand` — the
+        shard-group placement primitive. Co-placement: prefer the site
+        holding the most-headroom feasible server with >= k feasible
+        members (TP traffic stays on the site fabric); fall back to
+        cluster-wide spread when no single site can host the group.
+        Anti-affinity (one shard per server) is inherent: rows are
+        distinct servers. Deterministic: headroom-descending with
+        row-order tie-break, like `worst_fit`."""
+        self.sync()
+        d = (demand if isinstance(demand, np.ndarray)
+             else np.array([demand[r] for r in RESOURCES],
+                           dtype=np.float64))
+        feas = self.alive & (self.free >= d - _EPS).all(axis=1)
+        for sid in excluded:
+            i = self.sidx.get(sid) if sid else None
+            if i is not None:
+                feas[i] = False
+        if int(feas.sum()) < k:
+            return None
+        head = np.where(feas, self.head, -np.inf)
+        best_site, best_key = None, None
+        for s in range(len(self.site_names)):
+            rows = np.flatnonzero(feas & (self.site_of == s))
+            if len(rows) >= k:
+                key = float(head[rows].max())
+                if best_key is None or key > best_key:
+                    best_site, best_key = s, key
+        if best_site is not None:
+            rows = np.flatnonzero(feas & (self.site_of == best_site))
+        else:
+            rows = np.flatnonzero(feas)
+        order = sorted(rows.tolist(), key=lambda i: (-head[i], i))[:k]
+        return [self.server_ids[i] for i in order]
+
     def scratch(self, reserve_frac: float = 0.0) -> "ScratchView":
         return ScratchView(self, reserve_frac=reserve_frac)
 

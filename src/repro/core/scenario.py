@@ -10,6 +10,10 @@ re-protection loop.
 
 Event types:
     ServerFail / SiteFail      crash one server / a whole failure domain
+    ShardFail                  crash one server hosting a shard of a
+                               tensor-parallel group (physically a
+                               server crash; the controller's shard
+                               plane decides degrade/reshard/fallback)
     ServerRejoin               failed node returns (empty, gets refilled)
     AppArrival / AppDeparture  workload churn
     LoadSpike                  temporary request-rate multiplier
@@ -75,6 +79,17 @@ class SiteFail(ScenarioEvent):
 
 
 @dataclass(frozen=True)
+class ShardFail(ScenarioEvent):
+    """Kill one server hosting a member of a tensor-parallel shard
+    group. Physically identical to `ServerFail` (the whole host dies);
+    the distinct event type marks the *intent* — stressing the shard
+    plane's recovery ladder (degraded-TP continuation, reshard onto
+    survivors, monolith fallback) — and keeps traces self-describing.
+    With `tp_degree=1` (no groups) it behaves exactly like ServerFail."""
+    server: str = ""
+
+
+@dataclass(frozen=True)
 class ServerRejoin(ScenarioEvent):
     server: str = ""
 
@@ -106,7 +121,7 @@ class LinkDegrade(ScenarioEvent):
     duration: float = 10.0
 
 
-FAILURE_EVENTS = (ServerFail, SiteFail)
+FAILURE_EVENTS = (ServerFail, SiteFail, ShardFail)
 
 
 @dataclass
@@ -129,7 +144,7 @@ class Scenario:
         for e in self.events:
             if e.t < 0:
                 raise ValueError(f"negative event time: {e}")
-            if isinstance(e, (ServerFail, ServerRejoin)) \
+            if isinstance(e, (ServerFail, ServerRejoin, ShardFail)) \
                     and e.server not in cluster.servers:
                 raise ValueError(f"unknown server in {e}")
             if isinstance(e, SiteFail) and e.site not in cluster.sites:
@@ -392,6 +407,30 @@ def _metastable_overload(cluster, apps, rng) -> Scenario:
                     "recovery under never-relenting queueing pressure")
 
 
+def _tp_shard_storm(cluster, apps, rng) -> Scenario:
+    """The shard plane's stress case: three staggered `ShardFail`
+    kills against distinct servers with a load spike between them, so
+    several tensor-parallel groups lose a member while demand is up.
+    With `tp_degree=1` (the default) no groups exist and every kill is
+    an ordinary server crash — the scenario still builds, validates,
+    and replays deterministically. Pair it with `tp_degree>=2` and a
+    `shard_policy` (degrade / reshard / monolith) to exercise the
+    recovery ladder; `tools/bench_shardfail.py` sweeps exactly that."""
+    sids = _pick_servers(cluster, rng, 3)
+    events: List[ScenarioEvent] = [
+        ShardFail(t=1.0 + 6.0 * i, server=sid)
+        for i, sid in enumerate(sids)
+    ]
+    events.append(LoadSpike(t=2.0, factor=2.0, duration=8.0))
+    return Scenario(
+        name="tp-shard-storm",
+        events=events,
+        horizon=45.0,
+        description="staggered shard-host kills under a 2x spike: "
+                    "tensor-parallel groups lose members while demand "
+                    "is elevated")
+
+
 def _chaos(cluster, apps, rng) -> Scenario:
     """Seeded randomized churn stream (core/chaos.py): crashes with
     staggered rejoins, site blackouts, load spikes, and link degrades
@@ -415,6 +454,7 @@ SCENARIOS: Dict[str, ScenarioBuilder] = {
     "retry-amplification": _retry_amplification,
     "thundering-herd-rejoin": _thundering_herd_rejoin,
     "metastable-overload": _metastable_overload,
+    "tp-shard-storm": _tp_shard_storm,
     "chaos": _chaos,
 }
 

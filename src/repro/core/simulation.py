@@ -48,7 +48,9 @@ from repro.core.modelstate import (CLOUD_LINK, LOCAL, LinkScale,
 from repro.core.resilience import active as resilience_active
 from repro.core.scenario import (AppArrival, AppDeparture, LinkDegrade,
                                  LoadSpike, Scenario, ServerFail,
-                                 ServerRejoin, SiteFail, build_scenario)
+                                 ServerRejoin, ShardFail, SiteFail,
+                                 build_scenario)
+from repro.core.shardgroup import ShardGroupManager
 from repro.core.traffic import TrafficConfig, TrafficPlane
 from repro.core.variants import (
     Application, Variant, synthetic_family, LOAD_BW, WARMUP_S)
@@ -294,6 +296,14 @@ class SimConfig:
     # (halves PlannerState memory at 10k servers; NOT fingerprint-
     # preserving — scale runs only)
     planner_dtype: str = "float64"
+    # shard plane (core/shardgroup.py): tp_degree >= 2 deploys every
+    # app as a tensor-parallel group spanning tp_degree servers and
+    # attaches the shard recovery ladder; 1 (the default) keeps the
+    # historical monolith path bit-exact. `shard_policy` picks the
+    # ladder rung: "auto" (critical -> degrade, rest -> reshard),
+    # "degrade", "reshard", or "monolith" (immediate fallback)
+    tp_degree: int = 1
+    shard_policy: str = "auto"
 
 
 def synthetic_apps(cfg: SimConfig, rng: random.Random,
@@ -413,6 +423,13 @@ class Simulation:
             planner=cfg.planner, detector=self.detector,
             registry=self.registry, scheduler=cfg.scheduler,
             autopilot=pilot, planner_dtype=cfg.planner_dtype)
+        # shard plane: only constructed at tp_degree >= 2 (off-path
+        # bit-exactness — no manager, no shard branch anywhere)
+        self.shards: Optional[ShardGroupManager] = None
+        if cfg.tp_degree > 1:
+            self.shards = ShardGroupManager(
+                self.controller, tp_degree=cfg.tp_degree,
+                policy=cfg.shard_policy, defer=self.events.after)
         self.apps = apps if apps is not None else synthetic_apps(
             cfg, self.rng)
         # per-server "other tenants" reservation, recorded at setup so a
@@ -455,7 +472,15 @@ class Simulation:
         app = self.controller.apps.get(app_id)
         if app is None:
             return
-        v = app.variant_by_name(variant_name)
+        try:
+            v = app.variant_by_name(variant_name)
+        except KeyError:
+            # synthesized shard variants (degraded-TP continuation) live
+            # in the shard manager's side table, never in app.variants
+            v = (self.shards.lookup_variant(variant_name)
+                 if self.shards is not None else None)
+            if v is None:
+                raise
         self.traffic.mark_up(app_id, self.clock.now(),
                              accuracy=v.accuracy, service_time=v.compute,
                              full_accuracy=app.full.accuracy,
@@ -495,6 +520,11 @@ class Simulation:
                 down=app_id in ctl._unrecovered,
                 recent_downtime_s=downs.get(app_id, 0.0))
         return out
+
+    def shard_summary(self) -> Optional[Dict]:
+        """Shard-plane report (None when tp_degree == 1): group states,
+        ladder actions taken, and per-action MTTR averages."""
+        return self.shards.summary() if self.shards is not None else None
 
     def protection_summary(self) -> Dict[str, float]:
         """Warm-replica headroom actually spent over the run: mean and
@@ -571,7 +601,10 @@ class Simulation:
         placed = []
         for app in self.apps:
             try:
-                self.controller.deploy_primary(app)
+                if self.shards is not None:
+                    self.shards.deploy_group(app)
+                else:
+                    self.controller.deploy_primary(app)
                 placed.append(app)
             except ValueError:
                 continue
@@ -614,10 +647,18 @@ class Simulation:
             self._injection_seq += 1
             if self.traffic is not None:
                 routes = self.controller.routing.routes
+                # shard plane: a group member loss can black out an app
+                # whose route points at a SURVIVING lead (reshard /
+                # monolith fallback pause serving); a seamless degrade
+                # of a non-lead member keeps serving and is excluded
+                shard_dark = (self.shards.darkened_by(set(server_ids))
+                              if self.shards is not None else set())
+                marked = set()
                 for inst in lost:
                     if (inst.app_id in self.controller.apps
                             and routes.get(inst.app_id, (None,))[0]
                             == inst.server_id):
+                        marked.add(inst.app_id)
                         backup = None
                         if self.resilience is not None:
                             # hedged requests go to the app's warm
@@ -631,6 +672,9 @@ class Simulation:
                                     backup = (v.accuracy, v.compute)
                         self.traffic.mark_down(inst.app_id, t_fail,
                                                epoch, backup=backup)
+                for app_id in sorted(shard_dark - marked):
+                    if app_id in self.controller.apps:
+                        self.traffic.mark_down(app_id, t_fail, epoch)
             t_detect = (self.detector.detection_latency_bound()
                         + DETECT_SWEEP_S / 4)
             self.events.after(t_detect, lambda: self.controller
@@ -725,6 +769,11 @@ class Simulation:
         stats = {"unplaced_arrivals": 0}
         for ev in scenario.sorted_events():
             if isinstance(ev, ServerFail):
+                self._schedule_failure([ev.server], ev.t)
+            elif isinstance(ev, ShardFail):
+                # physically a server crash; the controller's shard
+                # plane (when attached) walks hit groups through the
+                # degrade/reshard/fallback ladder at detection time
                 self._schedule_failure([ev.server], ev.t)
             elif isinstance(ev, SiteFail):
                 self._schedule_failure(list(self.cluster.sites[ev.site]),

@@ -116,7 +116,8 @@ class SimBackend:
             event_mode=spec.event_mode, planner_dtype=spec.planner_dtype,
             load_bw=spec.load_bw, warmup_s=spec.warmup_s,
             nic_bw=spec.nic_bw, cloud_bw=spec.cloud_bw,
-            replication=spec.replication)
+            replication=spec.replication,
+            tp_degree=spec.tp_degree, shard_policy=spec.shard_policy)
         apps = list(spec.apps) if spec.apps is not None else None
         if apps is None and spec.app_mix == "arch":
             from repro.experiment.workload import (ARCH_COMPUTE_CAP,
@@ -147,7 +148,9 @@ class SimBackend:
             n_apps_final=res.n_apps_final, traffic=res.traffic,
             plan_wall_s=sim.controller.plan_wall_s,
             wall_s=time.perf_counter() - t0, sim_result=res,
-            extras={"protection": sim.protection_summary()})
+            extras={"protection": sim.protection_summary(),
+                    **({"shard": sim.shard_summary()}
+                       if spec.tp_degree > 1 else {})})
 
 
 # ---------------------------------------------------------------------------
@@ -176,6 +179,7 @@ class TestbedBackend:
             warmup_s=spec.warmup_s, nic_bw=spec.nic_bw,
             cloud_bw=spec.cloud_bw, replication=spec.replication,
             resilience=spec.resilience,
+            tp_degree=spec.tp_degree, shard_policy=spec.shard_policy,
             apps=list(spec.apps) if spec.apps is not None else None)
         try:
             tb.deploy()
@@ -197,7 +201,9 @@ class TestbedBackend:
             wall_s=time.perf_counter() - t0,
             detect_latency_s=out["detect_latency_s"],
             extras={"client_stats": out["client_stats"],
-                    "load_calibration": out.get("load_calibration", {})})
+                    "load_calibration": out.get("load_calibration", {}),
+                    **({"shard": out.get("shard", {})}
+                       if spec.tp_degree > 1 else {})})
 
 
 register_backend(SimBackend())

@@ -82,6 +82,15 @@ def _build_parser() -> argparse.ArgumentParser:
     run.add_argument("--scheduler", default=None,
                      choices=["fifo", "criticality"],
                      help="recovery drain-queue order")
+    run.add_argument("--tp-degree", type=int, default=None,
+                     dest="tp_degree",
+                     help="deploy every app as a tensor-parallel group "
+                          "spanning this many servers (shard plane, "
+                          "docs/SHARDING_FAILOVER.md); 1 = monoliths")
+    run.add_argument("--shard-policy", default=None, dest="shard_policy",
+                     choices=["auto", "degrade", "reshard", "monolith"],
+                     help="shard recovery ladder on a member loss "
+                          "(auto = critical->degrade, rest->reshard)")
     run.add_argument("--load-bw", type=float, default=None,
                      dest="load_bw",
                      help="disk->HBM bytes/s (Fig. 2b load model)")
@@ -112,7 +121,8 @@ def _spec_from_args(args) -> "ExperimentSpec":
                  "traffic_rate_scale", "traffic_diurnal_amplitude",
                  "traffic_diurnal_period", "autopilot", "client_hz",
                  "settle_s", "time_scale", "storage", "scheduler",
-                 "load_bw", "warmup_s", "event_mode", "planner_dtype"):
+                 "load_bw", "warmup_s", "event_mode", "planner_dtype",
+                 "tp_degree", "shard_policy"):
         val = getattr(args, attr, None)
         if val is not None:
             overrides[attr] = val

@@ -136,6 +136,14 @@ class RunResult:
             # soak trend's equal-or-lower-headroom evidence
             doc["protection"] = {k: _json_num(v)
                                  for k, v in prot.items()}
+        shard = self.extras.get("shard")
+        if shard:
+            # shard plane report (tp_degree >= 2): group states, ladder
+            # actions, per-action MTTRs, testbed reshard measurements
+            doc["shard"] = {k: ({kk: _json_num(vv)
+                                 for kk, vv in v.items()}
+                                if isinstance(v, dict) else _json_num(v))
+                            for k, v in shard.items()}
         return doc
 
 

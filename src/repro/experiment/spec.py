@@ -84,6 +84,14 @@ class ExperimentSpec:
     # halves PlannerState memory; scale runs only, not bit-exact)
     event_mode: str = "epoch"
     planner_dtype: str = "float64"
+    # shard plane (core/shardgroup.py): tp_degree >= 2 deploys every
+    # app as a tensor-parallel group of that many servers; shard_policy
+    # picks the recovery ladder rung on a member loss ("auto" =
+    # critical -> degrade, rest -> reshard; or force "degrade" /
+    # "reshard" / "monolith"). tp_degree=1 keeps the monolith path
+    # bit-exact on both backends.
+    tp_degree: int = 1
+    shard_policy: str = "auto"
     load_bw: float = LOAD_BW            # bytes/s disk->HBM (Fig. 2b)
     warmup_s: float = WARMUP_S          # per-instance warmup seconds
     nic_bw: Optional[float] = None      # preset overrides (None = keep)

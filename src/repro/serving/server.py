@@ -34,6 +34,7 @@ class WorkerServer:
         self.max_len = max_len
         self.engines: Dict[str, InferenceEngine] = {}     # variant -> engine
         self.cold_store: Dict[str, Variant] = {}          # on "disk"
+        self.shard_store: Dict[str, object] = {}          # TP slices (HBM)
         self._alive = threading.Event()
         self._alive.set()
         self._threads = []
@@ -54,6 +55,7 @@ class WorkerServer:
         self._alive.clear()
         with self._lock:
             self.engines.clear()
+            self.shard_store.clear()
 
     def revive(self):
         """Rejoin after a crash: the node returns EMPTY (engines were
@@ -113,6 +115,44 @@ class WorkerServer:
                 raise RuntimeError(f"{self.id} died during load")
             self.engines[variant.name] = eng
         return time.monotonic() - t0
+
+    def install(self, variant_name: str, engine: InferenceEngine):
+        """Adopt a pre-built engine (tensor-parallel deployments gather
+        their shard slices off-worker and install the result here)."""
+        if not self.alive:
+            raise RuntimeError(f"{self.id} is down")
+        with self._lock:
+            if not self.alive:
+                raise RuntimeError(f"{self.id} died during install")
+            self.engines[variant_name] = engine
+
+    def alias(self, dst: str, src: str) -> bool:
+        """Serve `src`'s resident engine under the name `dst` too
+        (degraded-TP routes keep answering on the gathered engine until
+        the honest rebuild swaps in). False if `src` is not resident."""
+        with self._lock:
+            eng = self.engines.get(src)
+            if eng is None or not self.alive:
+                return False
+            self.engines[dst] = eng
+            return True
+
+    def host_shard(self, name: str, slice_tree) -> None:
+        """Hold one TP weight slice in this cell's memory. Lost on
+        kill() (unlike the cold store, which models disk)."""
+        if not self.alive:
+            raise RuntimeError(f"{self.id} is down")
+        with self._lock:
+            if not self.alive:
+                raise RuntimeError(f"{self.id} died hosting a shard")
+            self.shard_store[name] = slice_tree
+
+    def shard(self, name: str):
+        """The hosted slice, or None if this cell is dead/empty."""
+        if not self.alive:
+            return None
+        with self._lock:
+            return self.shard_store.get(name)
 
     def unload(self, variant_name: str):
         with self._lock:

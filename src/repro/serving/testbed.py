@@ -51,13 +51,14 @@ from repro.core.resilience import (Bulkhead, CircuitBreaker, RetryBudget,
 from repro.core.resilience import active as resilience_active
 from repro.core.scenario import (AppArrival, AppDeparture, LinkDegrade,
                                  LoadSpike, Scenario, ServerFail,
-                                 ServerRejoin, SiteFail)
+                                 ServerRejoin, ShardFail, SiteFail)
 from repro.core.variants import Application
 from repro.experiment.workload import (ARCH_COMPUTE_CAP, TESTBED_ARCHS,
                                        arch_mem_cap, build_arch_apps,
                                        testbed_ladder)
 from repro.serving.router import Router
 from repro.serving.server import WorkerServer
+from repro.serving.shard import TestbedShardManager
 from repro.serving.workload import make_request
 
 DETECT_POLL_S = 0.02          # sweeper poll (controller sweep, §5.1)
@@ -87,6 +88,9 @@ class TestbedExecutor(LoadExecutor):
         # non-local fetch paths pay an emulated transfer sleep priced by
         # the same model the simulator uses.
         self.registry = registry
+        # testbed shard plane (serving/shard.py): slice loads are
+        # re-materialized partitions, not whole-model compiles
+        self.shard_plane = None
         self._scales = LinkScale()                 # LinkDegrade windows
         self._locks: Dict[str, threading.Lock] = {
             sid: threading.Lock() for sid in workers}
@@ -143,7 +147,12 @@ class TestbedExecutor(LoadExecutor):
                                                         server_id)
                     if sleep_s > 0:
                         time.sleep(sleep_s)
-                    wall = self.workers[server_id].load(app, variant)
+                    if (self.shard_plane is not None
+                            and self.shard_plane.is_slice(variant.name)):
+                        wall = self.shard_plane.materialize_slice(
+                            app, variant, server_id)
+                    else:
+                        wall = self.workers[server_id].load(app, variant)
                     ticket.source = source
                     ticket.fetch_s = sleep_s
                     ticket.warmup_s = wall
@@ -371,6 +380,7 @@ class MiniTestbed:
                  cloud_bw: Optional[float] = None,
                  replication: Optional[int] = None,
                  resilience=None,
+                 tp_degree: int = 1, shard_policy: str = "auto",
                  apps: Optional[Sequence[Application]] = None):
         self.rng = random.Random(seed)
         # request-plane resilience toolkit (None = historical client
@@ -447,11 +457,40 @@ class MiniTestbed:
         self._timers: List[threading.Timer] = []
         self._arrival_i = 0
 
+        # --- shard plane (tp_degree >= 2): REAL tensor-parallel groups
+        # across the worker threads (serving/shard.py). tp_degree=1
+        # keeps every historical path untouched.
+        self.shards: Optional[TestbedShardManager] = None
+        if tp_degree > 1:
+            self.shards = TestbedShardManager(
+                self, tp_degree=tp_degree, policy=shard_policy)
+            self.executor.shard_plane = self.shards
+
     # -- routing observers (replace the old monkey-patch) -------------------
     def _on_route_set(self, app_id: str, server_id: str,
                       variant_name: str):
+        if (self.shards is not None
+                and self.shards.on_route(app_id, server_id,
+                                         variant_name)):
+            return      # pushed by the shard plane once the engine is up
+        self._push_route(app_id, server_id, variant_name)
+
+    def _push_route(self, app_id: str, server_id: str,
+                    variant_name: str):
         self.router.set_route(app_id, server_id, variant_name)
         self.telemetry.route_up(app_id, time.monotonic())
+
+    def _accuracy_of(self, app: Application, variant_name: str) -> float:
+        """Served accuracy for a routed variant name; falls back to the
+        shard plane's synthesized (degraded-TP) variants."""
+        try:
+            return app.variant_by_name(variant_name).accuracy
+        except KeyError:
+            if self.shards is not None:
+                v = self.shards.lookup_variant(variant_name)
+                if v is not None:
+                    return v.accuracy
+            raise
 
     def _on_route_drop(self, app_id: str):
         self.router.drop_route(app_id)
@@ -528,7 +567,7 @@ class MiniTestbed:
                     samples = self._lat_samples.setdefault(app.id, [])
                     samples.append(time.monotonic() - t0)
                     del samples[:-64]          # keep a rolling window
-                return (app.variant_by_name(vname).accuracy, req)
+                return (self._accuracy_of(app, vname), req)
             finally:
                 if bh is not None:
                     bh.release()
@@ -602,9 +641,17 @@ class MiniTestbed:
     def deploy(self):
         for app in self.apps:
             self.telemetry.app_seen(app)
-            with self._ctl_lock:
-                sid = self.controller.deploy_primary(app)
-            self.workers[sid].load(app, app.full)
+            if self.shards is not None:
+                # TP-k group: slice the real param tree across k
+                # workers, gather + compile the serving engine on the
+                # lead (serving/shard.py)
+                with self._ctl_lock:
+                    self.shards.deploy_group(app)
+                self.shards.deploy_real(app)
+            else:
+                with self._ctl_lock:
+                    sid = self.controller.deploy_primary(app)
+                self.workers[sid].load(app, app.full)
             for w in self.workers.values():      # cold replicas everywhere
                 for v in app.variants:
                     w.stage_cold(app, v)
@@ -648,7 +695,7 @@ class MiniTestbed:
                                 app.variants[0].config.vocab_size)
                             ok = w.submit(vname, req)
                             if ok:
-                                acc = app.variant_by_name(vname).accuracy
+                                acc = self._accuracy_of(app, vname)
                                 st_ok += 1
             except Exception:                      # noqa: BLE001
                 ok = False
@@ -703,8 +750,18 @@ class MiniTestbed:
             self.workers[sid].kill()
         # clients see the blackout from the crash instant, well before
         # detection — same window semantics as the simulator
+        marked = set()
         for app_id, (sid, _v) in routes.items():
             if sid in sids:
+                self.telemetry.mark_down(app_id, t_kill, epoch)
+                marked.add(app_id)
+        if self.shards is not None:
+            # shard groups darken when ANY member dies unless the loss
+            # degrades seamlessly on a surviving lead — same rule the
+            # simulator applies at the crash instant
+            with self._ctl_lock:
+                dark = self.shards.darkened_by(set(sids))
+            for app_id in sorted(dark - marked):
                 self.telemetry.mark_down(app_id, t_kill, epoch)
 
     def _rejoin(self, sid: str):
@@ -737,6 +794,28 @@ class MiniTestbed:
     def _on_arrival(self, app: Application, stats: dict, hz: float):
         app = self._adapt_arrival(app)
         self.telemetry.app_seen(app)
+        if self.shards is not None:
+            with self._ctl_lock:
+                try:
+                    self.shards.deploy_group(app)
+                except ValueError:
+                    stats["unplaced_arrivals"] += 1
+                    return
+            self.apps.append(app)
+            for w in self.workers.values():
+                for v in app.variants:
+                    w.stage_cold(app, v)
+            # slices + gathered engine build in the background; clients
+            # fail until the group's lead engine comes up
+
+            def build():
+                try:
+                    self.shards.deploy_real(app)
+                except RuntimeError:
+                    pass                  # a member died mid-deploy
+            self.executor._spawn(build)
+            self._start_client(app, hz)
+            return
         with self._ctl_lock:
             try:
                 sid = self.controller.deploy_primary(app)
@@ -805,6 +884,8 @@ class MiniTestbed:
                     break
             if isinstance(ev, ServerFail):
                 self._fail_servers([ev.server])
+            elif isinstance(ev, ShardFail):
+                self._fail_servers([ev.server])
             elif isinstance(ev, SiteFail):
                 self._fail_servers(list(self.cluster.sites[ev.site]))
             elif isinstance(ev, ServerRejoin):
@@ -846,7 +927,10 @@ class MiniTestbed:
             per_epoch = ctl.summarize_epochs()
             cov = ctl.warm_coverage()
         traffic = self.telemetry.summarize(t_end)
+        out_shard = ({"shard": self.shards.summary()}
+                     if self.shards is not None else {})
         return {
+            **out_shard,
             "n_epochs": len(ctl.epoch_records),
             "per_epoch": per_epoch,
             "overall": overall,

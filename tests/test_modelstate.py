@@ -58,12 +58,13 @@ def test_golden_scenario_fingerprints(name):
 
 def test_golden_covers_every_pre_modelstate_scenario():
     # every named scenario that predates the model-state plane is pinned
-    # (cold-load-storm arrived with it, chaos with the soak harness, and
-    # the three resilience storms with the request-plane toolkit)
+    # (cold-load-storm arrived with it, chaos with the soak harness, the
+    # three resilience storms with the request-plane toolkit, and
+    # tp-shard-storm with the shard plane)
     assert set(GOLDEN_FINGERPRINTS) == (
         set(SCENARIOS) - {"cold-load-storm", "chaos",
                           "retry-amplification", "thundering-herd-rejoin",
-                          "metastable-overload"})
+                          "metastable-overload", "tp-shard-storm"})
 
 
 # ---------------------------------------------------------------------------

@@ -119,6 +119,54 @@ def test_filter_spec_always_divisible(d0, d1, data, model):
 
 
 # ---------------------------------------------------------------------------
+# shard-group conservation (core/shardgroup.py)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(["auto", "degrade", "reshard", "monolith"]),
+       kills=st.lists(st.integers(0, 7), min_size=1, max_size=5),
+       rejoin=st.booleans())
+def test_shard_group_conservation_under_arbitrary_failures(
+        seed, policy, kills, rejoin):
+    """Whatever sequence of ShardFail/ServerFail/rejoin events hits a
+    tensor-parallel deployment, every shard group ends the run in a
+    coherent state: member count matches the group state machine (live
+    = k members, degraded/resharding = 1..k-1, fallen-back = 0), no
+    member sits on a dead server, and pending reshard placements exist
+    exactly in the resharding state — check_conservation() holds."""
+    from repro.core.scenario import (Scenario, ServerFail, ServerRejoin,
+                                     ShardFail)
+    from repro.core.simulation import SimConfig, Simulation
+
+    rng = random.Random(seed)
+
+    def build(cluster, _rng):
+        sids = sorted(s.id for s in cluster.alive_servers())
+        events, t = [], 1.0
+        for i, k in enumerate(kills):
+            sid = sids[k % len(sids)]
+            ev = (ShardFail if i % 2 == 0 else ServerFail)
+            events.append(ev(t=t, server=sid))
+            if rejoin and i == 0:
+                events.append(ServerRejoin(t=t + 4.0, server=sid))
+            t += 3.0
+        return Scenario(name="prop-shard", events=events, horizon=t + 20.0)
+
+    sim = Simulation(SimConfig(
+        seed=rng.randrange(1 << 30), n_sites=3, servers_per_site=3,
+        headroom=0.25, tp_degree=2, shard_policy=policy,
+        traffic_rate_scale=0.0))
+    sim.run_scenario(build(sim.cluster, rng))
+    assert sim.shards is not None
+    sim.shards.check_conservation()
+    dead = {s.id for s in sim.cluster.servers.values() if not s.alive}
+    for g in sim.shards.groups.values():
+        for m in g.members.values():
+            assert m.server_id not in dead, (g.app_id, m.server_id)
+
+
+# ---------------------------------------------------------------------------
 # resilience-layer properties (core/resilience.py)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,204 @@
+"""Shard plane (core/shardgroup.py + serving/shard.py): TP-k groups,
+the ShardFail recovery ladder, and the real sharded testbed engine.
+
+The off-path contract (tp_degree=1 keeps every golden fingerprint
+bit-exact) is enforced by tests/test_modelstate.py; here we pin the
+on-path behavior of each ladder rung plus the tp=1 ShardFail ==
+ServerFail equivalence."""
+
+import math
+
+import pytest
+
+from repro.core.scenario import Scenario, ServerFail, ShardFail
+from repro.core.simulation import SimConfig, Simulation
+
+
+def _sim(policy, **kw):
+    cfg = dict(n_sites=3, servers_per_site=3, seed=0, headroom=0.25,
+               tp_degree=2, shard_policy=policy, storage="edge")
+    cfg.update(kw)
+    return Simulation(SimConfig(**cfg)).setup()
+
+
+def _kill_member(sim, app_id, *, lead=False):
+    g = sim.shards.groups[app_id]
+    rank = min(g.members) if lead else max(g.members)
+    victim = g.members[rank].server_id
+    return sim.run_scenario(Scenario(
+        name="one-shard", horizon=25.0,
+        events=[ShardFail(t=1.0, server=victim)]))
+
+
+# ---------------------------------------------------------------------------
+# deployment
+# ---------------------------------------------------------------------------
+
+def test_deploy_group_spans_distinct_servers():
+    sim = _sim("auto")
+    assert sim.shards is not None and sim.shards.groups
+    for app in sim.apps:
+        g = sim.shards.groups[app.id]
+        sids = [m.server_id for m in g.members.values()]
+        assert len(g.members) == 2 and len(set(sids)) == 2
+        assert g.state == "live"
+        # route answers on the rank-0 lead with the FULL variant name
+        srv, vname = sim.controller.routing.routes[app.id]
+        assert srv == g.lead.server_id and vname == app.full.name
+        # each slice checkpoint has its own residency entry
+        for rank, m in g.members.items():
+            sv = sim.shards.slice_variant(app.full, rank)
+            assert sv.mem_bytes == pytest.approx(app.full.mem_bytes / 2)
+    sim.shards.check_conservation()
+
+
+def test_auto_policy_resolves_by_criticality():
+    sim = _sim("auto")
+    for gid, g in sim.shards.groups.items():
+        app = sim.controller.apps[gid]
+        assert g.policy == ("degrade" if app.critical else "reshard")
+
+
+def test_tp1_keeps_shardfail_identical_to_serverfail():
+    """With no shard plane a ShardFail IS a ServerFail — bit-exact."""
+    def run(ev_cls):
+        sim = Simulation(SimConfig(n_sites=2, servers_per_site=3,
+                                   seed=0)).setup()
+        assert sim.shards is None
+        victim = sim.controller.primaries[sim.apps[0].id]
+        return sim.run_scenario(Scenario(
+            name="x", horizon=20.0,
+            events=[ev_cls(t=1.0, server=victim)])).fingerprint()
+    assert run(ShardFail) == run(ServerFail)
+
+
+# ---------------------------------------------------------------------------
+# the recovery ladder, rung by rung
+# ---------------------------------------------------------------------------
+
+def test_degrade_continuation():
+    sim = _sim("degrade")
+    app = sim.apps[0]
+    res = _kill_member(sim, app.id)
+    g = sim.shards.groups[app.id]
+    assert g.state == "degraded" and len(g.members) == 1
+    rec = next(r for r in res.records if r.app_id == app.id)
+    assert rec.mode == "shard-degrade" and rec.recovered
+    assert rec.phases["repartition"] > 0 and "fetch" not in rec.phases
+    # the synthetic variant lives in the side table, NOT app.variants
+    # (appending would corrupt app.smallest / cached demand matrices)
+    dv = sim.shards.lookup_variant(rec.variant)
+    assert dv is not None and dv.name.endswith("::tp1of2")
+    assert all(v.name != dv.name for v in app.variants)
+    assert dv.accuracy < app.full.accuracy
+    assert dv.compute > app.full.compute / 2       # k/k_alive service x
+    sim.shards.check_conservation()
+
+
+def test_degrade_of_nonlead_is_seamless_lead_is_not():
+    sim = _sim("degrade")
+    app = sim.apps[0]
+    g = sim.shards.groups[app.id]
+    lead_sid = g.lead.server_id
+    other_sid = g.members[max(g.members)].server_id
+    # non-lead loss: survivors keep answering -> no darkened app
+    assert app.id not in sim.shards.darkened_by({other_sid})
+    # lead loss: clients see the gap until the route flips
+    assert app.id in sim.shards.darkened_by({lead_sid})
+
+
+def test_reshard_restores_full_tp():
+    sim = _sim("reshard")
+    app = sim.apps[0]
+    res = _kill_member(sim, app.id)
+    g = sim.shards.groups[app.id]
+    assert g.state == "live" and len(g.members) == 2
+    assert g.pending is None
+    sids = {m.server_id for m in g.members.values()}
+    assert len(sids) == 2
+    rec = next(r for r in res.records if r.app_id == app.id)
+    assert rec.mode == "shard-reshard" and rec.recovered
+    # slice refetch + explicit repartition phase, priced as slice bytes
+    assert rec.phases["fetch"] > 0 and rec.phases["repartition"] > 0
+    assert rec.mttr > sim.shards.repartition_seconds(
+        sim.shards.slice_variant(app.full, 0), 1)
+    sim.shards.check_conservation()
+
+
+def test_monolith_fallback_dissolves_group():
+    sim = _sim("monolith")
+    app = sim.apps[0]
+    res = _kill_member(sim, app.id)
+    g = sim.shards.groups[app.id]
+    assert g.state == "fallen-back" and not g.members
+    assert not sim.shards.is_grouped(app.id)
+    rec = next(r for r in res.records if r.app_id == app.id)
+    assert rec.recovered                  # ordinary progressive failover
+    assert "shard-monolith" in sim.shards.summary()["actions"]
+    sim.shards.check_conservation()
+
+
+def test_ladder_client_mttr_ordering():
+    """The acceptance ordering behind BENCH_shardfail.json: degraded-TP
+    continuation answers fastest, reshard pays the slice fetch but
+    beats re-fetching whole monoliths through the cloud uplink."""
+    mttr = {}
+    for policy in ("degrade", "reshard", "monolith"):
+        sim = _sim(policy, servers_per_site=4)   # the bench smoke shape
+        t = sim.run_named_scenario("tp-shard-storm").traffic
+        assert math.isfinite(t.client_mttr_avg), policy
+        mttr[policy] = t.client_mttr_avg
+    assert mttr["degrade"] < mttr["reshard"] < mttr["monolith"]
+
+
+def test_second_loss_of_degraded_group_falls_back():
+    sim = _sim("degrade")
+    app = sim.apps[0]
+    g = sim.shards.groups[app.id]
+    s1 = g.members[max(g.members)].server_id
+    s2 = g.lead.server_id
+    sim.run_scenario(Scenario(name="double", horizon=30.0, events=[
+        ShardFail(t=1.0, server=s1),
+        ShardFail(t=8.0, server=s2),
+    ]))
+    assert g.state == "fallen-back"
+    summary = sim.shards.summary()
+    assert summary["actions"]["shard-degrade"] >= 1
+    assert summary["actions"].get("shard-monolith", 0) >= 1
+    sim.shards.check_conservation()
+
+
+# ---------------------------------------------------------------------------
+# testbed: a REAL sharded JAX engine surviving a shard-host kill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_testbed_reshard_measures_real_mttr():
+    from repro.serving.testbed import MiniTestbed
+    tb = MiniTestbed(n_sites=3, servers_per_site=1,
+                     archs=["rwkv6-3b"], apps_per_arch=1, seed=3,
+                     headroom=0.35, tp_degree=2, shard_policy="reshard")
+    try:
+        tb.deploy()
+        app = tb.apps[0]
+        g = tb.shards.groups[app.id]
+        victim = g.members[max(g.members)].server_id
+        res = tb.run_scenario(Scenario(
+            name="tb-shard", horizon=8.0,
+            events=[ShardFail(t=1.0, server=victim)]),
+            settle_s=30.0, client_hz=10.0)
+        assert g.state == "live" and len(g.members) == 2
+        assert victim not in {m.server_id for m in g.members.values()}
+        shard = res["shard"]
+        meas = shard["measured"]
+        # a real slice re-materialize + re-gather + recompile happened
+        assert meas["slice_fetch_s"]["n"] >= 1
+        assert meas["reshard_mttr_s"]["n"] >= 1
+        assert meas["reshard_mttr_s"]["avg_s"] > 0
+        # the measured repartition calibrated the sim's cost model
+        assert shard["repartition_scale"] != 1.0
+        # and the lead is serving the gathered full engine again
+        lead = tb.workers[g.lead.server_id]
+        assert lead.has(app.full.name)
+    finally:
+        tb.shutdown()

@@ -23,6 +23,43 @@ class FakeMesh:
         self.axis_sizes = tuple(sizes.values())
 
 
+def test_current_mesh_abstract_path():
+    """The non-deprecated abstract-mesh discovery is probed FIRST and
+    wins without touching the legacy pxla fallback."""
+    assert SH.current_mesh() is None
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    if hasattr(jax.sharding, "use_mesh"):          # newer jax
+        ctx = jax.sharding.use_mesh(mesh)
+    else:                                          # pre-public-export jax
+        from jax._src import mesh as mesh_lib
+        ctx = mesh_lib.set_abstract_mesh(mesh.abstract_mesh)
+    with ctx:
+        am = SH._mesh_from_abstract()
+        assert am is not None
+        assert tuple(am.axis_names) == ("data", "model")
+        # the pxla probe sees nothing here: only the abstract path hits
+        got = SH.current_mesh()
+        assert got is not None
+        assert tuple(got.axis_names) == ("data", "model")
+    assert SH._mesh_from_abstract() is None
+    assert SH.current_mesh() is None
+
+
+def test_current_mesh_pxla_fallback_path():
+    """The legacy `with Mesh(...):` context still resolves, through the
+    fallback probe."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with mesh:
+        pm = SH._mesh_from_pxla()
+        assert pm is not None and not pm.empty
+        assert tuple(pm.axis_names) == ("data", "model")
+        got = SH.current_mesh()
+        assert got is not None
+        assert tuple(got.axis_names) == ("data", "model")
+    assert SH._mesh_from_pxla() is None
+    assert SH.current_mesh() is None
+
+
 def test_param_specs_cover_all_archs():
     """Every parameter of every full config gets a valid spec and the
     big tensors are actually sharded on the production mesh."""

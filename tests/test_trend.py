@@ -113,7 +113,8 @@ def test_committed_trend_files_self_compare_green():
     for name in ("BENCH_soak.json", "BENCH_mttr_smoke.json",
                  "BENCH_planner_smoke.json", "BENCH_resilience.json",
                  "BENCH_resilience_smoke.json", "BENCH_scale.json",
-                 "BENCH_scale_smoke.json"):
+                 "BENCH_scale_smoke.json", "BENCH_shardfail.json",
+                 "BENCH_shardfail_smoke.json"):
         doc = json.loads((ROOT / name).read_text())
         fails, matched = CT.compare(doc, copy.deepcopy(doc))
         assert not fails and matched > 0, (name, fails)
@@ -167,6 +168,33 @@ def test_resilience_rows_carry_every_gated_metric():
     arms = {(r["scenario"], r["resilience"]) for r in rows}
     for scenario in {r["scenario"] for r in rows}:
         assert (scenario, "on") in arms and (scenario, "off") in arms
+
+
+def test_shardfail_rows_carry_every_gated_metric():
+    """Key coherence for the shardfail gate: every committed shardfail
+    trend row (tools/bench_shardfail.py) must carry every metric and
+    identity key the 'shardfail' spec gates on, all three ladder rungs
+    must be present per tp_degree, and the committed gate evidence —
+    degrade AND reshard each beating the monolith fallback on client
+    MTTR — must actually hold in the committed rows."""
+    spec = CT.SPECS["shardfail"]
+    for name in ("BENCH_shardfail.json", "BENCH_shardfail_smoke.json"):
+        doc = json.loads((ROOT / name).read_text())
+        assert doc["bench"] == "shardfail"
+        rows = doc[spec.rows_key]
+        assert rows
+        gated = {m.key for m in spec.metrics}
+        for row in rows:
+            assert gated <= set(row), (name, gated - set(row))
+            assert set(spec.id_keys) <= set(row)
+        cells = {(r["shard_policy"], r["tp_degree"]): r for r in rows}
+        for tp in {r["tp_degree"] for r in rows}:
+            for policy in ("degrade", "reshard", "monolith"):
+                assert (policy, tp) in cells, (name, policy, tp)
+            mono = cells[("monolith", tp)]["client_mttr_ms"]
+            for policy in ("degrade", "reshard"):
+                won = cells[(policy, tp)]["client_mttr_ms"]
+                assert 0 <= won < mono, (name, policy, tp, won, mono)
 
 
 def test_scale_rows_carry_every_gated_metric():

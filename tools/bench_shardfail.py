@@ -1,0 +1,182 @@
+#!/usr/bin/env python
+"""Shard-failure ladder benchmark -> BENCH_shardfail.json.
+
+Sweeps the shard recovery policy ladder (degrade / reshard / monolith
+fallback) across tensor-parallel degrees on the tp-shard-storm scenario
+— same cluster, same seeds, same ShardFail stream per cell — under the
+paper-faithful "edge" storage topology (slices live on peers, monolith
+variants pay the shared cloud uplink). Per (shard_policy, tp_degree)
+cell it records client-observed MTTR, pooled client-downtime
+percentiles, availability, goodput, and the shard plane's ladder-action
+counters:
+
+    PYTHONPATH=src python tools/bench_shardfail.py            # full
+    PYTHONPATH=src python tools/bench_shardfail.py --smoke    # CI
+    PYTHONPATH=src python tools/bench_shardfail.py --check-win
+
+`--check-win` exits non-zero unless BOTH shard-aware rungs — degraded-TP
+continuation AND reshard-onto-survivors — strictly beat the monolith
+fallback on client-observed MTTR at EVERY swept tp_degree: the
+acceptance gate for the shard plane.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+SCENARIO = "tp-shard-storm"
+POLICIES = ("degrade", "reshard", "monolith")
+ACTIONS = ("shard-degrade", "shard-reshard", "shard-monolith")
+
+
+def run_cell(policy, tp_degree, seeds, *, n_sites, servers_per_site,
+             headroom):
+    import numpy as np
+
+    from repro.experiment import ExperimentSpec, run_experiment
+
+    downs, n_unrec = [], 0
+    client_mttr, avail, goodput, recov = [], [], [], []
+    actions = {a: 0 for a in ACTIONS}
+    action_mttrs = {a: [] for a in ACTIONS}
+    for seed in seeds:
+        spec = ExperimentSpec(
+            scenario=SCENARIO, seed=seed, n_sites=n_sites,
+            servers_per_site=servers_per_site, headroom=headroom,
+            storage="edge", tp_degree=tp_degree, shard_policy=policy)
+        res = run_experiment(spec)
+        t = res.traffic
+        downs += [w.client_downtime for w in t.windows
+                  if w.recovered and math.isfinite(w.client_downtime)]
+        n_unrec += t.n_unrecovered_windows
+        if math.isfinite(t.client_mttr_avg):
+            client_mttr.append(t.client_mttr_avg)
+        avail.append(t.availability)
+        goodput.append(t.goodput)
+        recov.append(res.overall.get("recovery_rate", 1.0))
+        shard = res.extras.get("shard", {})
+        for a, n in shard.get("actions", {}).items():
+            actions[a] = actions.get(a, 0) + n
+        for a, s in shard.get("mttr_avg_s", {}).items():
+            action_mttrs.setdefault(a, []).append(s)
+
+    downs_a = np.asarray(downs, dtype=float)
+    return {
+        "shard_policy": policy,
+        "tp_degree": tp_degree,
+        "seeds": list(seeds),
+        # client-observed MTTR averaged over seeds (-1 = never darkened)
+        "client_mttr_ms": round(1e3 * float(np.mean(client_mttr)), 2)
+        if client_mttr else -1.0,
+        # pooled client-observed blackout percentiles (-1 = no windows)
+        "client_p50_ms": round(float(np.percentile(downs_a, 50)) * 1e3, 2)
+        if downs_a.size else -1.0,
+        "client_p99_ms": round(float(np.percentile(downs_a, 99)) * 1e3, 2)
+        if downs_a.size else -1.0,
+        "availability": round(float(np.mean(avail)), 6),
+        "goodput": round(float(np.mean(goodput)), 6),
+        "recovery_rate": round(float(np.mean(recov)), 6),
+        "n_windows": len(downs),
+        "n_unrecovered_windows": n_unrec,
+        # ladder actions taken + their control-plane MTTRs (seed-avg)
+        **{f"n_{a.replace('shard-', '')}": n
+           for a, n in sorted(actions.items())},
+        **{f"mttr_{a.replace('shard-', '')}_ms":
+           round(1e3 * float(np.mean(v)), 2) if v else -1.0
+           for a, v in sorted(action_mttrs.items())},
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_shardfail.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one seed, tp=2 only, small cluster (CI)")
+    ap.add_argument("--seeds", default=None,
+                    help="comma-separated seed list")
+    ap.add_argument("--check-win", action="store_true",
+                    help="fail unless degrade AND reshard each strictly "
+                         "beat monolith fallback on client MTTR at "
+                         "every tp_degree")
+    args = ap.parse_args()
+
+    if args.seeds:
+        seeds = [int(s) for s in args.seeds.split(",")]
+    else:
+        seeds = [0] if args.smoke else [0, 1, 2]
+    shape = (dict(n_sites=3, servers_per_site=4, headroom=0.25)
+             if args.smoke
+             else dict(n_sites=4, servers_per_site=5, headroom=0.2))
+    tp_degrees = (2,) if args.smoke else (2, 4)
+
+    rows = []
+    for tp in tp_degrees:
+        for policy in POLICIES:
+            row = run_cell(policy, tp, seeds, **shape)
+            rows.append(row)
+            print(f"shardfail,tp={tp},{policy},"
+                  f"client_mttr={row['client_mttr_ms']}ms,"
+                  f"p99={row['client_p99_ms']}ms,"
+                  f"avail={row['availability']},"
+                  f"degrade={row['n_degrade']},"
+                  f"reshard={row['n_reshard']},"
+                  f"monolith={row['n_monolith']}", flush=True)
+
+    def cell(policy, tp):
+        return next(r for r in rows if r["shard_policy"] == policy
+                    and r["tp_degree"] == tp)
+
+    gate = []
+    for tp in tp_degrees:
+        d, r, m = (cell("degrade", tp), cell("reshard", tp),
+                   cell("monolith", tp))
+        gate.append({
+            "tp_degree": tp,
+            "degrade_client_mttr_ms": d["client_mttr_ms"],
+            "reshard_client_mttr_ms": r["client_mttr_ms"],
+            "monolith_client_mttr_ms": m["client_mttr_ms"],
+        })
+    doc = {
+        "bench": "shardfail",
+        "description": "shard recovery ladder (core/shardgroup.py) on "
+                       "tp-shard-storm under edge storage: degraded-TP "
+                       "continuation vs reshard-onto-survivors vs "
+                       "monolith fallback per tensor-parallel degree; "
+                       "client MTTR averaged over seeds, downtime "
+                       "percentiles pooled over seeds",
+        "seeds": seeds,
+        "cluster": shape,
+        "unit": "milliseconds",
+        "rows": rows,
+        "gate": gate,
+    }
+    Path(args.out).write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    for g in gate:
+        print(f"  tp={g['tp_degree']}: "
+              f"degrade {g['degrade_client_mttr_ms']}ms, "
+              f"reshard {g['reshard_client_mttr_ms']}ms, "
+              f"monolith {g['monolith_client_mttr_ms']}ms")
+
+    if args.check_win:
+        ok = all(
+            0 <= g["degrade_client_mttr_ms"]
+            < g["monolith_client_mttr_ms"]
+            and 0 <= g["reshard_client_mttr_ms"]
+            < g["monolith_client_mttr_ms"]
+            for g in gate)
+        if not ok:
+            print("FAIL: a shard-aware rung did not strictly beat the "
+                  "monolith fallback on client MTTR")
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

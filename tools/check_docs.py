@@ -29,7 +29,8 @@ ROOT = Path(__file__).resolve().parents[1]
 
 SNIPPET_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/SCENARIOS.md",
                  "docs/PLANNER.md", "docs/EXPERIMENTS.md", "docs/CI.md",
-                 "docs/RESILIENCE.md", "docs/SCALE.md"]
+                 "docs/RESILIENCE.md", "docs/SCALE.md",
+                 "docs/SHARDING_FAILOVER.md"]
 LINK_FILES_GLOB = ["*.md", "docs/*.md"]
 
 FENCE_RE = re.compile(r"^```python\s*$")

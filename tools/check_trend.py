@@ -89,6 +89,18 @@ SPECS: Dict[str, BenchSpec] = {
             Metric("latency_p99_ms", "lower", rel_tol=0.20, abs_tol=25.0),
             Metric("client_p99_ms", "lower", rel_tol=0.25, abs_tol=50.0),
         )),
+    # bench_shardfail rows (shard_policy x tp_degree): deterministic
+    # sim under edge storage; MTTR bands absorb reviewed drift only
+    "shardfail": BenchSpec(
+        rows_key="rows",
+        id_keys=("shard_policy", "tp_degree"),
+        metrics=(
+            Metric("client_mttr_ms", "lower", rel_tol=0.20, abs_tol=25.0),
+            Metric("client_p99_ms", "lower", rel_tol=0.25, abs_tol=50.0),
+            Metric("availability", "higher", abs_tol=0.01),
+            Metric("goodput", "higher", rel_tol=0.02, abs_tol=0.005),
+            Metric("recovery_rate", "higher", abs_tol=0.02),
+        )),
     # bench_scale cells (servers x apps): placements/recoveries are
     # deterministic and exact; throughput + planning wall are
     # wall-clock and machine-dependent -> very loose bands
