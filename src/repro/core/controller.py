@@ -314,7 +314,9 @@ class FailLiteController:
                  registry: Optional[ModelRegistry] = None,
                  scheduler: str = "fifo",
                  autopilot: Optional[object] = None,
-                 planner_dtype: str = "float64"):
+                 planner_dtype: str = "float64",
+                 planner_backend: str = "numpy",
+                 planner_coordinators: int = 0):
         assert policy in POLICIES, policy
         self.cluster = cluster
         self.clock = clock
@@ -335,13 +337,17 @@ class FailLiteController:
         self.site_independence = site_independence
         self.use_ilp = use_ilp
         # planner selection by registry name (docs/PLANNER.md); the
-        # legacy `use_ilp` flag maps onto the "ilp" planner
-        self.planner = get_planner(planner or ("ilp" if use_ilp
-                                               else "greedy"))
+        # legacy `use_ilp` flag maps onto the "ilp" planner.
+        # backend/coordinator knobs only apply to the greedy family —
+        # other policies (ilp, load-aware, ...) ignore them.
+        self.planner_backend = planner_backend
+        self.planner_coordinators = int(planner_coordinators)
+        self.planner = self._resolve_planner(
+            planner or ("ilp" if use_ilp else "greedy"))
         # the failover hot path (§3.3, MTTR-critical) always runs a
         # realtime planner; non-realtime ones (ilp) plan proactively only
         self.fast_planner = (self.planner if self.planner.realtime
-                             else get_planner("greedy"))
+                             else self._resolve_planner("greedy"))
         # persistent array-backed capacity view; Cluster notifies it of
         # per-server deltas, so planning never rebuilds a view per call
         self.state = PlannerState(cluster, dtype=planner_dtype)
@@ -514,7 +520,40 @@ class FailLiteController:
             self.executor.prepare_warm(self.apps[app_id], variant, sid)
             self.ds.put(f"warm/{app_id}", {"server": sid,
                                            "variant": variant.name})
+        # Re-derive the rows this proactive round just dirtied while we
+        # are still in proactive time: sync() is idempotent and runs at
+        # the start of every plan anyway, so paying it here keeps a big
+        # warm-placement round's dirt out of the first failover round's
+        # MTTR-critical plan wall.
+        if assignment:
+            self.state.sync()
         return assignment
+
+    def _resolve_planner(self, name: str):
+        """Instantiate a registered planner, forwarding the backend /
+        coordinator knobs to the policies that take them."""
+        kwargs = {}
+        if name in ("greedy", "sharded"):
+            kwargs["backend"] = self.planner_backend
+        if name == "sharded" and self.planner_coordinators:
+            kwargs["coordinators"] = self.planner_coordinators
+        return get_planner(name, **kwargs)
+
+    def planner_stats(self) -> dict:
+        """Observability snapshot of the planner configuration and the
+        per-instance counters the greedy-family policies maintain
+        (backend routing, dense fallbacks) — surfaced in
+        `RunResult.extras["planner"]`."""
+        out = {"name": self.planner.name,
+               "backend": self.planner_backend,
+               "coordinators": self.planner_coordinators}
+        skip = ("name", "backend", "coordinators")
+        for planner in {id(self.planner): self.planner,
+                        id(self.fast_planner): self.fast_planner}.values():
+            for k, v in getattr(planner, "stats", {}).items():
+                if k not in skip and isinstance(v, int):
+                    out[k] = out.get(k, 0) + v
+        return out
 
     def _plan(self, cands, *, alpha=0.0, proactive=False):
         """One planner round over `cands` against the persistent state.
@@ -1051,6 +1090,10 @@ class FailLiteController:
                                            "variant": variant.name})
             placed[app_id] = (variant, sid)
         self._futile_replan = memo if not placed else None
+        # same rationale as plan_warm_backups: eager resync keeps the
+        # repair round's dirt off the next failover plan wall
+        if placed:
+            self.state.sync()
         return placed
 
     @property

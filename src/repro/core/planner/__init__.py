@@ -22,17 +22,19 @@ from repro.core.planner.ilp import (PlacementResult, build_constraints,
                                     enumerate_vars, solve_warm_placement)
 from repro.core.planner.legacy import (faillite_heuristic_legacy, match,
                                        worst_fit)
+from repro.core.planner.kernels import have_jax, resolve_backend
 from repro.core.planner.state import PlannerState, ScratchView
 from repro.core.planner.vectorized import faillite_heuristic, plan_greedy
-from repro.core.planner.sharded import SiteIndex
+from repro.core.planner.sharded import CoordinatedSiteIndex, SiteIndex
 from repro.core.planner import policies as _policies  # noqa: F401  (registers planners)
 from repro.core.planner import sharded as _sharded  # noqa: F401  (registers "sharded")
 
 __all__ = [
-    "HeuristicResult", "PlacementResult", "PlanRequest", "PlanResult",
-    "Planner", "PlannerState", "ScratchView", "SiteIndex",
-    "available_planners", "build_constraints", "enumerate_vars",
-    "eq1_objective", "faillite_heuristic", "faillite_heuristic_legacy",
-    "get_planner", "match", "plan_greedy", "register_planner",
-    "solve_warm_placement", "worst_fit",
+    "CoordinatedSiteIndex", "HeuristicResult", "PlacementResult",
+    "PlanRequest", "PlanResult", "Planner", "PlannerState",
+    "ScratchView", "SiteIndex", "available_planners",
+    "build_constraints", "enumerate_vars", "eq1_objective",
+    "faillite_heuristic", "faillite_heuristic_legacy", "get_planner",
+    "have_jax", "match", "plan_greedy", "register_planner",
+    "resolve_backend", "solve_warm_placement", "worst_fit",
 ]

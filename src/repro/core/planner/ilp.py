@@ -35,6 +35,20 @@ from repro.core.planner.state import PlannerState
 from repro.core.variants import Application, Variant
 
 
+def _branch_frac(x) -> np.ndarray:
+    """Per-variable fractionality |x - round(x)|, pinned to float64.
+
+    Branching-variable selection argmaxes this vector; a relaxation
+    vector that arrives in a narrower dtype (e.g. float32 from a
+    future solver backend) would round 0.49999999-style values to 0.5
+    and flip which variable the argmax picks, changing the search tree.
+    Casting here makes the branching order a function of the VALUES,
+    not of the dtype they were handed over in (regression-tested by
+    tests/test_planner.py)."""
+    x = np.asarray(x, dtype=np.float64)
+    return np.abs(x - np.round(x))
+
+
 @dataclass
 class PlacementResult:
     assignment: Dict[str, Tuple[Variant, str]]   # app -> (variant, server)
@@ -228,7 +242,7 @@ def solve_warm_placement(apps: List[Application], cluster: Cluster,
         if nodes > node_limit or time.time() - t0 > time_limit_s:
             optimal = False
             break
-        frac = np.abs(x - np.round(x))
+        frac = _branch_frac(x)
         j = int(np.argmax(frac))
         if frac[j] < 1e-6:
             if bound < best_obj - 1e-9:
@@ -240,7 +254,7 @@ def solve_warm_placement(apps: List[Application], cluster: Cluster,
             obj2, x2 = lp(lo2, hi2)
             if obj2 is None or obj2 >= best_obj - 1e-9:
                 continue
-            frac2 = np.abs(x2 - np.round(x2))
+            frac2 = _branch_frac(x2)
             if frac2.max() < 1e-6:
                 best_obj, best_x = obj2, x2
             else:

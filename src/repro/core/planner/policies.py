@@ -24,18 +24,45 @@ from repro.core.cluster import RESOURCES
 from repro.core.planner.base import (PlanRequest, PlanResult, Planner,
                                      register_planner)
 from repro.core.planner.ilp import solve_warm_placement
+from repro.core.planner.kernels import resolve_backend
 from repro.core.planner.legacy import faillite_heuristic_legacy
 from repro.core.planner.vectorized import plan_greedy
 
 
 @register_planner("greedy")
 class GreedyPlanner(Planner):
-    """Algorithm 1, vectorized — the MTTR-critical default."""
+    """Algorithm 1, vectorized — the MTTR-critical default.
+
+    ``backend="jax"`` routes rounds through the compiled chunk kernels
+    (planner/jax_backend.py): bit-identical assignments and objective,
+    compiled inner loops. Requests carrying a `latency_fn` need the
+    dense (V, S) mask layout and fall back to the numpy path (counted
+    in `stats["fallback_numpy"]`).
+    """
 
     realtime = True
 
+    def __init__(self, backend: str = "numpy"):
+        self.backend = resolve_backend(backend)
+        self.stats = {"backend": self.backend, "jax_rounds": 0,
+                      "numpy_rounds": 0, "fallback_numpy": 0}
+        self._ctx = None
+
     def plan(self, req: PlanRequest) -> PlanResult:
         exclude, site_exclude = req.exclusions()
+        if self.backend == "jax":
+            if req.latency_fn is None:
+                from repro.core.planner.jax_backend import (JaxPlanContext,
+                                                            plan_greedy_jax)
+                if self._ctx is None:
+                    self._ctx = JaxPlanContext()
+                self.stats["jax_rounds"] += 1
+                return plan_greedy_jax(req.apps, req.cluster,
+                                       state=req.state, exclude=exclude,
+                                       site_exclude=site_exclude,
+                                       alpha=req.alpha, ctx=self._ctx)
+            self.stats["fallback_numpy"] += 1
+        self.stats["numpy_rounds"] += 1
         return plan_greedy(req.apps, req.cluster, state=req.state,
                            exclude=exclude, site_exclude=site_exclude,
                            alpha=req.alpha, latency_fn=req.latency_fn)

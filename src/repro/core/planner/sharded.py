@@ -29,18 +29,32 @@ same code path.
 Registered as planner "sharded" (realtime): opt in with
 ``SimConfig(planner="sharded")`` / ``--planner sharded``. Custom
 rank/tiebreak/latency hooks need the dense rank vector, so requests
-carrying a `latency_fn` fall back to the dense path.
+carrying a `latency_fn` fall back to the dense path; each such
+fallback is counted in ``stats["fallback_dense"]`` and warned once.
+
+Two scale knobs compose with the sharding: ``backend="jax"`` routes
+whole planning rounds through the compiled chunked kernels
+(jax_backend.py — bit-identical to numpy, see docs/PLANNER.md), and
+``coordinators=N`` plans independent site groups on a thread pool
+(`CoordinatedSiteIndex`) with a deterministic single-coordinator
+merge.
 """
 
 from __future__ import annotations
+
+import logging
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
 from repro.core.planner.base import (PlanRequest, PlanResult, Planner,
                                      register_planner)
+from repro.core.planner.kernels import resolve_backend
 from repro.core.planner.vectorized import plan_greedy
 
 _EPS = 1e-9
+
+logger = logging.getLogger("repro.planner.sharded")
 
 
 class SiteIndex:
@@ -78,21 +92,27 @@ class SiteIndex:
         g = int(self.group_of[k])
         self.site_max[g] = float(headroom[self.members[g]].max())
 
-    def select(self, free: np.ndarray, headroom: np.ndarray,
-               d: np.ndarray, excl_rows) -> int:
-        """Dense-argmax-equivalent worst-fit query: the feasible row of
-        maximal headroom, minimal row index on ties; -1 when nothing
-        fits. Scans sites in descending ceiling order and stops once no
-        remaining site can reach the best feasible headroom found."""
+    def _excl_mask(self, excl_rows):
+        if excl_rows is None:
+            return None
+        # membership mask once per query instead of np.isin per
+        # examined site — same rows excluded, no sort per site
+        excl_mask = np.zeros(self.group_of.size, bool)
+        excl_mask[excl_rows] = True
+        return excl_mask
+
+    def _scan_groups(self, groups: np.ndarray, free: np.ndarray,
+                     headroom: np.ndarray, d: np.ndarray, excl_mask):
+        """Descending-ceiling scan restricted to `groups`: the feasible
+        row of maximal headroom among those sites, minimal row index on
+        ties; (-inf, -1) when nothing fits. Over all groups this is the
+        dense argmax; over a slice it is that slice's exact winner, so
+        per-slice results merge deterministically (max h, then min
+        row)."""
         best_h = -np.inf
         best_k = -1
-        excl_mask = None
-        if excl_rows is not None:
-            # membership mask once per query instead of np.isin per
-            # examined site — same rows excluded, no sort per site
-            excl_mask = np.zeros(self.group_of.size, bool)
-            excl_mask[excl_rows] = True
-        for g in np.argsort(-self.site_max, kind="stable"):
+        for g in groups[np.argsort(-self.site_max[groups],
+                                   kind="stable")]:
             sm = float(self.site_max[g])
             if sm < best_h:
                 break               # no later site can beat or tie best
@@ -117,6 +137,56 @@ class SiteIndex:
             r = int(rows[j])
             if h > best_h or (h == best_h and r < best_k):
                 best_h, best_k = h, r
+        return best_h, best_k
+
+    def select(self, free: np.ndarray, headroom: np.ndarray,
+               d: np.ndarray, excl_rows) -> int:
+        """Dense-argmax-equivalent worst-fit query: the feasible row of
+        maximal headroom, minimal row index on ties; -1 when nothing
+        fits. Scans sites in descending ceiling order and stops once no
+        remaining site can reach the best feasible headroom found."""
+        _h, k = self._scan_groups(np.arange(len(self.members)), free,
+                                  headroom, d, self._excl_mask(excl_rows))
+        return k
+
+
+class CoordinatedSiteIndex(SiteIndex):
+    """Multi-coordinator site-sharded selection.
+
+    The site groups are partitioned into `coordinators` contiguous
+    slices ("row groups"); every worst-fit query scans the slices
+    concurrently on a thread pool and merges the per-slice winners with
+    a deterministic rule — maximal headroom, then minimal global row —
+    so the answer is the dense argmax winner regardless of thread
+    scheduling (fuzz-asserted by tests/test_planner.py). Per-slice
+    scans reuse `SiteIndex._scan_groups`, so each coordinator keeps the
+    descending-ceiling early exit within its slice."""
+
+    def __init__(self, site_of_rows: np.ndarray, headroom: np.ndarray,
+                 *, coordinators: int = 2, pool=None):
+        super().__init__(site_of_rows, headroom)
+        G = len(self.members)
+        c = max(1, min(int(coordinators), max(G, 1)))
+        bounds = np.linspace(0, G, c + 1).astype(np.int64)
+        self._slices = [np.arange(bounds[i], bounds[i + 1])
+                        for i in range(c) if bounds[i + 1] > bounds[i]]
+        self._pool = pool
+
+    def select(self, free: np.ndarray, headroom: np.ndarray,
+               d: np.ndarray, excl_rows) -> int:
+        excl_mask = self._excl_mask(excl_rows)
+        if self._pool is None or len(self._slices) <= 1:
+            parts = [self._scan_groups(s, free, headroom, d, excl_mask)
+                     for s in self._slices]
+        else:
+            parts = list(self._pool.map(
+                lambda s: self._scan_groups(s, free, headroom, d,
+                                            excl_mask), self._slices))
+        best_h, best_k = -np.inf, -1
+        for h, k in parts:
+            if k >= 0 and (h > best_h
+                           or (h == best_h and (best_k < 0 or k < best_k))):
+                best_h, best_k = h, k
         return best_k
 
 
@@ -126,21 +196,70 @@ class ShardedGreedyPlanner(Planner):
 
     Identical assignments to the "greedy" planner bit-for-bit; chosen
     for planet-scale clusters where the dense per-attempt scan
-    dominates failover planning wall time."""
+    dominates failover planning wall time.
+
+    ``backend="jax"`` routes latency-free rounds through the compiled
+    chunk kernels instead of the site-sharded Python scan — same bits,
+    compiled inner loops. ``coordinators=N`` (numpy path) plans with N
+    concurrent site-slice coordinators (`CoordinatedSiteIndex`).
+    Requests carrying a `latency_fn` fall back to the dense vectorized
+    path either way — logged once per planner instance and counted in
+    ``stats["fallback_dense"]`` (surfaced via `RunResult.extras`)."""
 
     realtime = True
+
+    def __init__(self, backend: str = "numpy", coordinators: int = 0):
+        self.backend = resolve_backend(backend)
+        self.coordinators = int(coordinators)
+        self.stats = {"backend": self.backend,
+                      "coordinators": self.coordinators,
+                      "jax_rounds": 0, "sharded_rounds": 0,
+                      "fallback_dense": 0}
+        self._warned_dense = False
+        self._ctx = None
+        self._pool = None
 
     def plan(self, req: PlanRequest) -> PlanResult:
         exclude, site_exclude = req.exclusions()
         if req.latency_fn is not None:
             # latency masks need the dense (V, S) layout; correctness
             # over speed for the rare latency-constrained request
+            if not self._warned_dense:
+                logger.warning(
+                    "sharded planner: request carries a latency_fn; "
+                    "falling back to the DENSE selection path "
+                    "(warning logged once per planner instance; see "
+                    "stats['fallback_dense'] for the running count)")
+                self._warned_dense = True
+            self.stats["fallback_dense"] += 1
             return plan_greedy(req.apps, req.cluster, state=req.state,
                                exclude=exclude, site_exclude=site_exclude,
                                alpha=req.alpha, latency_fn=req.latency_fn)
+        if self.backend == "jax":
+            from repro.core.planner.jax_backend import (JaxPlanContext,
+                                                        plan_greedy_jax)
+            if self._ctx is None:
+                self._ctx = JaxPlanContext()
+            self.stats["jax_rounds"] += 1
+            return plan_greedy_jax(req.apps, req.cluster, state=req.state,
+                                   exclude=exclude,
+                                   site_exclude=site_exclude,
+                                   alpha=req.alpha, ctx=self._ctx)
+        factory = SiteIndex
+        if self.coordinators > 1:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.coordinators,
+                    thread_name_prefix="planner-coord")
+            c, pool = self.coordinators, self._pool
+
+            def factory(site_of_rows, headroom):
+                return CoordinatedSiteIndex(site_of_rows, headroom,
+                                            coordinators=c, pool=pool)
+        self.stats["sharded_rounds"] += 1
         return plan_greedy(req.apps, req.cluster, state=req.state,
                            exclude=exclude, site_exclude=site_exclude,
-                           alpha=req.alpha, site_index=SiteIndex)
+                           alpha=req.alpha, site_index=factory)
 
 
-__all__ = ["SiteIndex", "ShardedGreedyPlanner"]
+__all__ = ["CoordinatedSiteIndex", "SiteIndex", "ShardedGreedyPlanner"]

@@ -58,6 +58,9 @@ class PlannerState:
         # locality-aware policies read per-server residency and fetch
         # costs through this; None = no registry attached
         self.registry = None
+        # attached device mirrors (planner/jax_backend.DeviceMirror):
+        # sync() forwards dirty rows, structural rebuilds invalidate
+        self._mirrors: List = []
         self._rebuild()
         if subscribe:
             cluster.subscribe(self._on_change)
@@ -91,6 +94,9 @@ class PlannerState:
         self._dirty = set(range(S))
         self._structure_stale = False
         self._alive_cache = None
+        # _rebuild also runs from __init__, before _mirrors exists
+        for m in getattr(self, "_mirrors", ()):
+            m.invalidate()
 
     def _on_change(self, server_id: str):
         i = self.sidx.get(server_id)
@@ -107,24 +113,33 @@ class PlannerState:
         if not self._dirty:
             return 0
         n = len(self._dirty)
-        for i in self._dirty:
+        R = len(RESOURCES)
+        idx = np.fromiter(self._dirty, np.int64, n)
+        rows = np.empty((n, R), np.float64)
+        for t in range(n):
+            i = int(idx[t])
             srv = self.cluster.servers[self.server_ids[i]]
             # accumulate cached per-variant demand vectors instead of
             # Server.free's per-resource dict-building genexpr: same
             # instances, same iteration order, same left-to-right
             # float64 adds per component — bit-identical row values
-            used = np.zeros(len(RESOURCES), np.float64)
+            used = np.zeros(R, np.float64)
             for inst in srv.instances.values():
                 if inst.role != "cold":
                     used += inst.variant.demand_vec
-            self.free[i] = np.array(
-                [srv.capacity[r] for r in RESOURCES], np.float64) - used
-            # same per-row math worst_fit used to run over the full
-            # matrix: min over resources of free/capacity
-            self.head[i] = (self.free[i] / self.capacity[i]).min()
+            rows[t] = [srv.capacity[r] for r in RESOURCES]
+            rows[t] -= used
             if self.alive[i] != srv.alive:
                 self.alive[i] = srv.alive
                 self._alive_cache = None
+        self.free[idx] = rows
+        # same per-row math worst_fit used to run over the full matrix:
+        # min over resources of free/capacity, divided in the state
+        # dtype (batched over dirty rows — elementwise, so each row is
+        # bit-identical to the former one-row-at-a-time computation)
+        self.head[idx] = (self.free[idx] / self.capacity[idx]).min(axis=1)
+        for m in self._mirrors:
+            m.mark_dirty(self._dirty)
         self._dirty.clear()
         return n
 
@@ -221,6 +236,16 @@ class PlannerState:
 
     def scratch(self, reserve_frac: float = 0.0) -> "ScratchView":
         return ScratchView(self, reserve_frac=reserve_frac)
+
+    # -- device mirrors ------------------------------------------------------
+    def attach_mirror(self, mirror) -> None:
+        """Register a device-side mirror of the free/head/alive arrays
+        (the jax backend's `DeviceMirror`). `sync()` forwards the dirty
+        row set to `mirror.mark_dirty` before clearing it, and a
+        structural `_rebuild` calls `mirror.invalidate` — so the mirror
+        can stay incremental (O(dirty) scatter) without re-deriving
+        anything from the cluster itself."""
+        self._mirrors.append(mirror)
 
     # -- model-state columns -------------------------------------------------
     def attach_registry(self, registry) -> None:

@@ -296,6 +296,15 @@ class SimConfig:
     # (halves PlannerState memory at 10k servers; NOT fingerprint-
     # preserving — scale runs only)
     planner_dtype: str = "float64"
+    # planner compute backend: "numpy" (bit-exact default, golden
+    # fingerprints pinned) or "jax" (compiled chunk kernels,
+    # planner/jax_backend.py — bit-identical assignments, property-
+    # tested); "jax" requires jax importable. Only the greedy family
+    # ("greedy"/"sharded") honors it. `planner_coordinators` >= 2
+    # plans sharded rounds with that many concurrent site-slice
+    # coordinators (numpy sharded path only)
+    planner_backend: str = "numpy"
+    planner_coordinators: int = 0
     # shard plane (core/shardgroup.py): tp_degree >= 2 deploys every
     # app as a tensor-parallel group spanning tp_degree servers and
     # attaches the shard recovery ladder; 1 (the default) keeps the
@@ -422,7 +431,9 @@ class Simulation:
             site_independence=cfg.site_independence, use_ilp=cfg.use_ilp,
             planner=cfg.planner, detector=self.detector,
             registry=self.registry, scheduler=cfg.scheduler,
-            autopilot=pilot, planner_dtype=cfg.planner_dtype)
+            autopilot=pilot, planner_dtype=cfg.planner_dtype,
+            planner_backend=cfg.planner_backend,
+            planner_coordinators=cfg.planner_coordinators)
         # shard plane: only constructed at tp_degree >= 2 (off-path
         # bit-exactness — no manager, no shard branch anywhere)
         self.shards: Optional[ShardGroupManager] = None

@@ -114,6 +114,8 @@ class SimBackend:
             storage=spec.storage, scheduler=spec.scheduler,
             autopilot=spec.autopilot, resilience=spec.resilience,
             event_mode=spec.event_mode, planner_dtype=spec.planner_dtype,
+            planner_backend=spec.planner_backend,
+            planner_coordinators=spec.planner_coordinators,
             load_bw=spec.load_bw, warmup_s=spec.warmup_s,
             nic_bw=spec.nic_bw, cloud_bw=spec.cloud_bw,
             replication=spec.replication,
@@ -149,6 +151,7 @@ class SimBackend:
             plan_wall_s=sim.controller.plan_wall_s,
             wall_s=time.perf_counter() - t0, sim_result=res,
             extras={"protection": sim.protection_summary(),
+                    "planner": sim.controller.planner_stats(),
                     **({"shard": sim.shard_summary()}
                        if spec.tp_degree > 1 else {})})
 
@@ -202,6 +205,7 @@ class TestbedBackend:
             detect_latency_s=out["detect_latency_s"],
             extras={"client_stats": out["client_stats"],
                     "load_calibration": out.get("load_calibration", {}),
+                    "planner": ctl.planner_stats(),
                     **({"shard": out.get("shard", {})}
                        if spec.tp_degree > 1 else {})})
 

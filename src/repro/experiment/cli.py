@@ -72,6 +72,15 @@ def _build_parser() -> argparse.ArgumentParser:
                      choices=["float64", "float32"],
                      help="planner array dtype; float32 halves planner "
                           "memory for planet-scale runs (not bit-exact)")
+    run.add_argument("--planner-backend", default=None,
+                     dest="planner_backend", choices=["numpy", "jax"],
+                     help="planner compute backend: numpy (default) or "
+                          "jax compiled chunk kernels — bit-identical "
+                          "plans (docs/PLANNER.md)")
+    run.add_argument("--planner-coordinators", type=int, default=None,
+                     dest="planner_coordinators", metavar="N",
+                     help="sharded planner: plan with N concurrent "
+                          "site-slice coordinators (numpy path)")
     run.add_argument("--client-hz", type=float, default=None)
     run.add_argument("--settle", type=float, default=None,
                      dest="settle_s")
@@ -122,6 +131,7 @@ def _spec_from_args(args) -> "ExperimentSpec":
                  "traffic_diurnal_period", "autopilot", "client_hz",
                  "settle_s", "time_scale", "storage", "scheduler",
                  "load_bw", "warmup_s", "event_mode", "planner_dtype",
+                 "planner_backend", "planner_coordinators",
                  "tp_degree", "shard_policy"):
         val = getattr(args, attr, None)
         if val is not None:

@@ -136,6 +136,13 @@ class RunResult:
             # soak trend's equal-or-lower-headroom evidence
             doc["protection"] = {k: _json_num(v)
                                  for k, v in prot.items()}
+        planner = self.extras.get("planner")
+        if planner:
+            # planner configuration + counters (backend routing, dense
+            # fallbacks) — gates the backend-parity CI trend specs
+            doc["planner"] = {k: (v if isinstance(v, str)
+                                  else _json_num(v))
+                              for k, v in planner.items()}
         shard = self.extras.get("shard")
         if shard:
             # shard plane report (tp_degree >= 2): group states, ladder

@@ -84,6 +84,12 @@ class ExperimentSpec:
     # halves PlannerState memory; scale runs only, not bit-exact)
     event_mode: str = "epoch"
     planner_dtype: str = "float64"
+    # planner compute backend: "numpy" (bit-exact default) or "jax"
+    # (compiled chunk kernels, bit-identical — docs/PLANNER.md);
+    # planner_coordinators >= 2 runs sharded numpy rounds with that
+    # many concurrent site-slice coordinators
+    planner_backend: str = "numpy"
+    planner_coordinators: int = 0
     # shard plane (core/shardgroup.py): tp_degree >= 2 deploys every
     # app as a tensor-parallel group of that many servers; shard_policy
     # picks the recovery ladder rung on a member loss ("auto" =

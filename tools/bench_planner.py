@@ -52,10 +52,11 @@ def make_instance(n_apps: int, n_servers: int, n_variants: int = 6,
     return apps, cluster
 
 
-def time_planner(name: str, apps, cluster, repeats: int = 1) -> dict:
+def time_planner(name: str, apps, cluster, repeats: int = 1,
+                 **planner_kw) -> dict:
     from repro.core.planner import PlanRequest, get_planner
 
-    planner = get_planner(name)
+    planner = get_planner(name, **planner_kw)
     best, res = float("inf"), None
     for _ in range(repeats):
         t0 = time.perf_counter()
@@ -91,6 +92,39 @@ def bench_heuristics(scales, repeats: int) -> list:
         print(f"planner,{n_apps},{n_servers},"
               f"legacy={row['legacy_s']:.4f}s,"
               f"vectorized={row['vectorized_s']:.4f}s,"
+              f"speedup={row['speedup']:.1f}x,"
+              f"parity={int(row['parity'])}", flush=True)
+    return points
+
+
+def bench_backends(scales, repeats: int) -> list:
+    """numpy vs jax planner backend, same instances as the heuristic
+    sweep. Best-of-N repeats on one persistent planner, so the jax
+    number excludes one-time kernel compilation (the failover-round
+    steady state — a proactive round pays the compile in production;
+    see docs/PLANNER.md)."""
+    from repro.core.planner import have_jax
+
+    if not have_jax():
+        print("backend sweep skipped: jax not importable", flush=True)
+        return []
+    points = []
+    for n_apps, n_servers in scales:
+        apps, cluster = make_instance(n_apps, n_servers)
+        r_np = time_planner("greedy", apps, cluster, repeats=repeats,
+                            backend="numpy")
+        r_jx = time_planner("greedy", apps, cluster,
+                            repeats=max(repeats, 2), backend="jax")
+        row = {"n_apps": n_apps, "n_servers": n_servers,
+               "numpy_s": round(r_np["wall_s"], 6),
+               "jax_s": round(r_jx["wall_s"], 6),
+               "speedup": round(r_np["wall_s"]
+                                / max(r_jx["wall_s"], 1e-12), 2),
+               "parity": (r_np["objective"] == r_jx["objective"]
+                          and r_np["placed"] == r_jx["placed"])}
+        points.append(row)
+        print(f"backend,{n_apps},{n_servers},"
+              f"numpy={row['numpy_s']:.4f}s,jax={row['jax_s']:.4f}s,"
               f"speedup={row['speedup']:.1f}x,"
               f"parity={int(row['parity'])}", flush=True)
     return points
@@ -142,6 +176,13 @@ def main() -> int:
     ap.add_argument("--check-speedup", type=float, default=None,
                     help="fail unless the largest point reaches this "
                          "legacy->vectorized speedup")
+    ap.add_argument("--backend", action="store_true", dest="backend_sweep",
+                    default=None,
+                    help="force the numpy-vs-jax backend sweep (default: "
+                         "run it when jax imports; this flag makes a "
+                         "missing jax a hard error)")
+    ap.add_argument("--no-backend", action="store_false",
+                    dest="backend_sweep", help="skip the backend sweep")
     args = ap.parse_args()
 
     if args.scales:
@@ -152,15 +193,23 @@ def main() -> int:
     ilp_sizes = ILP_SIZES[:1] if args.smoke else ILP_SIZES
 
     points = bench_heuristics(scales, args.repeats)
+    backend = []
+    if args.backend_sweep is not False:
+        if args.backend_sweep:
+            from repro.core.planner import have_jax
+            assert have_jax(), "--backend requires jax"
+        backend = bench_backends(scales, args.repeats)
     ilp = bench_ilp(ilp_sizes)
 
     doc = {
         "bench": "planner",
         "description": "Algorithm 1 legacy loop vs vectorized planner "
-                       "wall time by fleet size; Eq. 1-7 B&B ILP at "
-                       "testbed scale",
+                       "wall time by fleet size; numpy vs jax planner "
+                       "backend on the same instances; Eq. 1-7 B&B ILP "
+                       "at testbed scale",
         "unit": "seconds",
         "heuristic": points,
+        "backend": backend,
         "ilp": ilp,
     }
     Path(args.out).write_text(json.dumps(doc, indent=2) + "\n")
@@ -168,6 +217,9 @@ def main() -> int:
 
     if not all(p["parity"] for p in points):
         print("FAIL: vectorized planner diverged from legacy", flush=True)
+        return 1
+    if not all(p["parity"] for p in backend):
+        print("FAIL: jax planner backend diverged from numpy", flush=True)
         return 1
     if args.check_speedup is not None:
         top = max(points, key=lambda p: p["n_apps"])

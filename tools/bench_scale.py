@@ -19,7 +19,8 @@ deterministic site-outage scenario per cell and recording:
     PYTHONPATH=src python tools/bench_scale.py                # full sweep
     PYTHONPATH=src python tools/bench_scale.py --smoke        # CI cells
     PYTHONPATH=src python tools/bench_scale.py \
-        --check-speedup 5.0 --check-plan-wall 1.0
+        --check-speedup 4.0 --check-plan-wall 1.0 \
+        --check-jax-plan-speedup 3.0
 
 Cluster sizing inverts the simulator's budget rule: `synthetic_apps`
 emits ~one app per 2.3 GB of `primary_util * total_mem`, so
@@ -46,6 +47,11 @@ AVG_FULL_MEM = 2.3e9          # mean full-variant bytes of the 9-family mix
 PRIMARY_UTIL = 0.5
 SCENARIO = "site-outage"
 
+
+def _have_jax() -> bool:
+    from repro.core.planner.kernels import have_jax
+    return have_jax()
+
 # (n_servers, n_apps target, servers/site, rate_scale, chunk_s, per-event?)
 FULL_CELLS = [
     dict(n_servers=1000, n_apps=10000, per_site=50,
@@ -65,9 +71,10 @@ SMOKE_CELLS = [
 ]
 
 
-def run_cell(cell: dict, mode: str, seed: int = 0) -> dict:
-    """One (cell, event_mode) measurement — meant to run in its own
-    process so peak RSS is per-cell."""
+def run_cell(cell: dict, mode: str, seed: int = 0,
+             backend: str = "numpy") -> dict:
+    """One (cell, event_mode, planner_backend) measurement — meant to
+    run in its own process so peak RSS is per-cell."""
     import resource
 
     from repro.core.simulation import SimConfig, Simulation
@@ -79,6 +86,7 @@ def run_cell(cell: dict, mode: str, seed: int = 0) -> dict:
         n_sites=max(1, n_servers // per_site), servers_per_site=per_site,
         server_mem=n_apps * AVG_FULL_MEM / (n_servers * PRIMARY_UTIL),
         headroom=0.2, seed=seed, planner="sharded", planner_dtype=dtype,
+        planner_backend=backend,
         traffic_rate_scale=cell["rate_scale"],
         traffic_chunk_s=cell["chunk_s"], event_mode=mode)
 
@@ -99,6 +107,7 @@ def run_cell(cell: dict, mode: str, seed: int = 0) -> dict:
         "mode": mode, "n_sites": cfg.n_sites,
         "n_apps_placed": res.n_apps_final,
         "planner": "sharded", "planner_dtype": dtype,
+        "planner_backend": backend,
         "setup_wall_s": round(setup_s, 3),
         "run_wall_s": round(run_s, 3),
         "n_events": n_events, "n_requests": n_requests,
@@ -112,10 +121,12 @@ def run_cell(cell: dict, mode: str, seed: int = 0) -> dict:
     }
 
 
-def run_cell_subprocess(cell: dict, mode: str, seed: int) -> dict:
+def run_cell_subprocess(cell: dict, mode: str, seed: int,
+                        backend: str = "numpy") -> dict:
     """Fork a fresh interpreter for the measurement; falls back to
     in-process when the spawn itself fails."""
-    payload = json.dumps({"cell": cell, "mode": mode, "seed": seed})
+    payload = json.dumps({"cell": cell, "mode": mode, "seed": seed,
+                          "backend": backend})
     proc = subprocess.run(
         [sys.executable, str(Path(__file__).resolve()),
          "--cell-json", payload],
@@ -148,6 +159,37 @@ def sweep(cells, seed: int, in_process: bool) -> list:
         pe = per_mode.get("per-event")
         row = {"n_servers": cell["n_servers"], "n_apps": cell["n_apps"],
                **{k: v for k, v in ep.items() if k != "mode"}}
+
+        # jax planner backend on the epoch drain: same deterministic
+        # replay, compiled planner inner loops — the plan-wall columns
+        # are the jax-backend acceptance gate (docs/PLANNER.md)
+        jx = None
+        if _have_jax():
+            print(f"scale,{key},epoch+jax: running...", flush=True)
+            jx = (run_cell(cell, "epoch", seed, backend="jax")
+                  if in_process
+                  else run_cell_subprocess(cell, "epoch", seed,
+                                           backend="jax"))
+            print(f"scale,{key},epoch+jax,"
+                  f"plan_peak={jx['plan_wall_peak_s']*1e3:.1f}ms,"
+                  f"run={jx['run_wall_s']:.2f}s", flush=True)
+            # the compiled backend must replay the identical control
+            # plane: same placements, same recoveries, same rate
+            for k in ("n_apps_placed", "recovery_rate",
+                      "n_recovery_records"):
+                assert jx[k] == ep[k], (k, jx[k], ep[k])
+        if jx is not None:
+            row["plan_wall_peak_jax_s"] = jx["plan_wall_peak_s"]
+            row["plan_wall_total_jax_s"] = jx["plan_wall_total_s"]
+            row["run_wall_jax_s"] = jx["run_wall_s"]
+            row["jax_plan_speedup"] = round(
+                ep["plan_wall_peak_s"]
+                / max(jx["plan_wall_peak_s"], 1e-9), 2)
+        else:
+            row["plan_wall_peak_jax_s"] = SENTINEL
+            row["plan_wall_total_jax_s"] = SENTINEL
+            row["run_wall_jax_s"] = SENTINEL
+            row["jax_plan_speedup"] = SENTINEL
         if pe is not None:
             row["events_per_sec_per_event"] = pe["events_per_sec"]
             row["run_wall_per_event_s"] = pe["run_wall_s"]
@@ -187,12 +229,17 @@ def main() -> int:
     ap.add_argument("--check-plan-wall", type=float, default=None,
                     help="fail unless the largest cell's peak failover "
                          "plan phase stays under this many seconds")
+    ap.add_argument("--check-jax-plan-speedup", type=float, default=None,
+                    help="fail unless the largest cell's jax planner "
+                         "backend beats the numpy peak failover plan "
+                         "wall by this factor")
     ap.add_argument("--cell-json", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
 
     if args.cell_json:                     # subprocess worker entry
         req = json.loads(args.cell_json)
-        row = run_cell(req["cell"], req["mode"], req["seed"])
+        row = run_cell(req["cell"], req["mode"], req["seed"],
+                       req.get("backend", "numpy"))
         print("RESULT " + json.dumps(row))
         return 0
 
@@ -237,6 +284,17 @@ def main() -> int:
         else:
             print(f"ok: peak failover plan {top['plan_wall_peak_s']}s "
                   f"< {args.check_plan_wall}s at {top['n_servers']} "
+                  f"servers / {top['n_apps']} apps")
+    if args.check_jax_plan_speedup is not None:
+        top = max(rows, key=lambda r: r["n_servers"] * r["n_apps"])
+        if top["jax_plan_speedup"] < args.check_jax_plan_speedup:
+            print(f"FAIL: jax plan speedup {top['jax_plan_speedup']}x "
+                  f"at {top['n_servers']}x{top['n_apps']} "
+                  f"< {args.check_jax_plan_speedup}x")
+            rc = 1
+        else:
+            print(f"ok: jax plan speedup {top['jax_plan_speedup']}x >= "
+                  f"{args.check_jax_plan_speedup}x at {top['n_servers']} "
                   f"servers / {top['n_apps']} apps")
     return rc
 

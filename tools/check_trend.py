@@ -114,6 +114,11 @@ SPECS: Dict[str, BenchSpec] = {
             Metric("speedup", "higher", rel_tol=0.8),
             Metric("plan_wall_peak_s", "lower", rel_tol=2.0,
                    abs_tol=0.05),
+            # jax planner backend columns (absent in pre-backend trend
+            # files — compare_rows skips missing metrics)
+            Metric("plan_wall_peak_jax_s", "lower", rel_tol=2.0,
+                   abs_tol=0.05),
+            Metric("jax_plan_speedup", "higher", rel_tol=0.8),
         )),
     # bench_planner heuristic points: parity/placements are exact;
     # speedup is wall-clock and machine-dependent -> very loose band
@@ -125,6 +130,17 @@ SPECS: Dict[str, BenchSpec] = {
             Metric("vectorized_placed", "equal"),
             Metric("vectorized_objective", "higher", rel_tol=1e-9,
                    abs_tol=1e-6),
+            Metric("speedup", "higher", rel_tol=0.8),
+        )),
+    # bench_planner numpy-vs-jax backend rows (same document as
+    # "planner" — gate it a second time with --spec planner-backend):
+    # parity is exact by the bit-identical contract; the backend
+    # speedup is wall-clock -> very loose band
+    "planner-backend": BenchSpec(
+        rows_key="backend",
+        id_keys=("n_apps", "n_servers"),
+        metrics=(
+            Metric("parity", "equal"),
             Metric("speedup", "higher", rel_tol=0.8),
         )),
 }
@@ -160,16 +176,23 @@ def compare_rows(ref: dict, cur: dict, spec: BenchSpec,
     return fails
 
 
-def compare(trend: dict, current: dict) -> Tuple[List[str], int]:
-    """(failures, n_matched). Zero matched rows is itself a failure."""
+def compare(trend: dict, current: dict,
+            spec_name: str = None) -> Tuple[List[str], int]:
+    """(failures, n_matched). Zero matched rows is itself a failure.
+
+    ``spec_name`` overrides the spec lookup (default: the documents'
+    own "bench" field) so one benchmark document can be gated under
+    several row sets — the planner doc under both "planner" and
+    "planner-backend"."""
     bench = trend.get("bench")
     if bench != current.get("bench"):
         return ([f"bench mismatch: trend={bench!r} "
                  f"current={current.get('bench')!r}"], 0)
-    if bench not in SPECS:
-        return ([f"no gate spec for bench {bench!r}; "
+    name = spec_name or bench
+    if name not in SPECS:
+        return ([f"no gate spec for bench {name!r}; "
                  f"have {sorted(SPECS)}"], 0)
-    spec = SPECS[bench]
+    spec = SPECS[name]
 
     def index(doc):
         rows = doc.get(spec.rows_key, [])
@@ -181,15 +204,15 @@ def compare(trend: dict, current: dict) -> Tuple[List[str], int]:
     matched = 0
     for key, cur in sorted(cur_rows.items(), key=lambda kv: str(kv[0])):
         ref = ref_rows.get(key)
-        label = f"{bench}[" + ",".join(f"{k}={v}" for k, v
-                                       in zip(spec.id_keys, key)) + "]"
+        label = f"{name}[" + ",".join(f"{k}={v}" for k, v
+                                      in zip(spec.id_keys, key)) + "]"
         if ref is None:
             print(f"note {label}: new row, no trend baseline")
             continue
         matched += 1
         fails += compare_rows(ref, cur, spec, label)
     if matched == 0:
-        fails.append(f"no {bench!r} rows matched the trend — "
+        fails.append(f"no {name!r} rows matched the trend — "
                      f"the gate compared nothing")
     return fails, matched
 
@@ -200,11 +223,15 @@ def main() -> int:
                     help="committed trend JSON (the baseline)")
     ap.add_argument("--current", required=True,
                     help="freshly produced benchmark JSON")
+    ap.add_argument("--spec", default=None, choices=sorted(SPECS),
+                    help="gate spec override (default: the documents' "
+                         "own 'bench' field) — lets one benchmark doc "
+                         "be gated under several row sets")
     args = ap.parse_args()
 
     trend = json.loads(Path(args.trend).read_text())
     current = json.loads(Path(args.current).read_text())
-    fails, matched = compare(trend, current)
+    fails, matched = compare(trend, current, args.spec)
     if fails:
         print(f"\nTREND GATE FAILED ({len(fails)} regression(s), "
               f"{matched} row(s) compared):")

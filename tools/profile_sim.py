@@ -60,7 +60,8 @@ def build_spec(args):
     return spec.with_(**overrides)
 
 
-def profile_cprofile(spec, top_n: int, sort: str, out: str):
+def profile_cprofile(spec, top_n: int, sort: str, out: str,
+                     planner_only: bool = False):
     from repro.experiment.backends import run_experiment
 
     prof = cProfile.Profile()
@@ -71,7 +72,17 @@ def profile_cprofile(spec, top_n: int, sort: str, out: str):
     wall = time.perf_counter() - t0
 
     stats = pstats.Stats(prof, stream=sys.stdout)
-    stats.sort_stats(sort).print_stats(top_n)
+    if planner_only:
+        # restrict the table to the planner package (state sync, the
+        # vectorized/sharded/jax paths, kernels) + the plan-wall summary
+        stats.sort_stats(sort).print_stats(
+            r"repro[/\\](core[/\\]planner|kernels)", top_n)
+        planner = (res.extras or {}).get("planner", {})
+        if planner:
+            print("planner: " + ", ".join(f"{k}={v}" for k, v
+                                          in sorted(planner.items())))
+    else:
+        stats.sort_stats(sort).print_stats(top_n)
     if out:
         stats.dump_stats(out)
         print(f"wrote {out} (snakeviz/flameprof-compatible)")
@@ -118,13 +129,17 @@ def main() -> int:
     ap.add_argument("--pyinstrument", action="store_true",
                     help="use pyinstrument's sampling tree when the "
                          "package is importable (falls back to cProfile)")
+    ap.add_argument("--planner-only", action="store_true",
+                    help="restrict the cProfile table to the planner "
+                         "package and print the run's planner stats "
+                         "(backend, rounds, fallbacks)")
     args = ap.parse_args()
 
     spec = build_spec(args)
     print(f"profiling: backend={spec.backend} scenario={spec.scenario} "
           f"event_mode={spec.event_mode} seed={spec.seed}")
 
-    if args.pyinstrument:
+    if args.pyinstrument and not args.planner_only:
         try:
             res, wall = profile_pyinstrument(spec, args.out)
         except ImportError:
@@ -132,7 +147,8 @@ def main() -> int:
             res, wall = profile_cprofile(spec, args.top, args.sort,
                                          args.out)
     else:
-        res, wall = profile_cprofile(spec, args.top, args.sort, args.out)
+        res, wall = profile_cprofile(spec, args.top, args.sort, args.out,
+                                     planner_only=args.planner_only)
 
     t = res.traffic
     n_req = t.n_offered if t is not None else 0
